@@ -1,0 +1,36 @@
+"""Framework kernel microbench: semiring SpMV throughput (edges/s proxy on
+CPU interpret mode; HW roofline terms come from the dry-run probes)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+from repro.kernels import ref as R
+from repro.kernels.semiring_spmv import EDGE_BLOCK, spmv_partials
+
+
+def main() -> None:
+    print("== kernels: semiring SpMV (interpret mode) ==")
+    key = jax.random.PRNGKey(0)
+    n = 32 * EDGE_BLOCK
+    vals = jax.random.uniform(key, (n,), jnp.float32, 0, 10)
+    dst = jax.random.randint(key, (n,), -1, 128)
+    w = jax.random.uniform(key, (n,), jnp.float32, 0.1, 1.0)
+    for semiring in ("min", "min_plus", "plus_times"):
+        f = jax.jit(lambda v, d, ww, s=semiring: spmv_partials(
+            v, d, ww, semiring=s, interpret=True))
+        f(vals, dst, w).block_until_ready()  # compile
+        _, us = timed(lambda: f(vals, dst, w).block_until_ready(), repeats=3)
+        emit(f"kernels/spmv/{semiring}", us, f"edges={n};"
+             f"Medges_per_s={n / us:.2f}")
+        fr = jax.jit(lambda v, d, ww, s=semiring: R.spmv_partials_ref(
+            v, d, ww, semiring=s))
+        fr(vals, dst, w).block_until_ready()
+        _, us_r = timed(lambda: fr(vals, dst, w).block_until_ready(),
+                        repeats=3)
+        emit(f"kernels/spmv_ref/{semiring}", us_r, "oracle")
+
+
+if __name__ == "__main__":
+    main()

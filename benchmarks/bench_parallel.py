@@ -1,0 +1,37 @@
+"""Paper Fig 8: machine scalability — same graph, increasing shard counts.
+
+Reproduces the paper's shape: near-linear speedup in useful-work-per-shard at
+first, then a knee where per-shard priority queues become local (message
+volume grows) — observable directly in the messages metric."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit, run_asymp
+from repro.configs.base import GraphConfig
+from repro.core import graph as G
+
+
+def main() -> None:
+    print("== Fig 8: parallelizability (fixed rmat14, shards 1..16) ==")
+    base_cfg = GraphConfig(name="rmat14", algorithm="cc",
+                           num_vertices=1 << 14, avg_degree=16,
+                           generator="rmat", num_shards=1, priority="log",
+                           enforce_fraction=0.1)
+    base = None
+    for shards in (1, 2, 4, 8, 16):
+        cfg = dataclasses.replace(base_cfg, num_shards=shards)
+        g, _, tot = run_asymp(cfg)
+        # shard-seconds of engine work ~ ticks (each tick is one parallel
+        # wave across shards); per-shard work = ticks * budget
+        if base is None:
+            base = tot
+        emit(f"fig8/shards{shards}", tot["wall_s"] * 1e6,
+             f"ticks={tot['ticks']};tick_speedup_x="
+             f"{base['ticks'] / tot['ticks']:.2f};"
+             f"messages={tot['sent']};"
+             f"msg_growth_x={tot['sent'] / max(base['sent'], 1):.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Paper Fig 9b: message-order optimization — priority strategy x enforcement
+fraction vs messages accepted (on the RMAT stand-in for Orkut)."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit, run_asymp
+from repro.configs.base import GraphConfig
+from repro.core import graph as G
+
+
+def main() -> None:
+    print("== Fig 9b: priority strategies (rmat14) ==")
+    base_cfg = GraphConfig(name="rmat14", algorithm="cc",
+                           num_vertices=1 << 14, avg_degree=16,
+                           generator="rmat", num_shards=8)
+    g = G.build_sharded_graph(base_cfg)
+    for strategy in ("disabled", "linear", "log"):
+        for frac in (1.0, 0.10, 0.05, 0.025):
+            cfg = dataclasses.replace(base_cfg, priority=strategy,
+                                      enforce_fraction=frac)
+            _, _, tot = run_asymp(cfg, graph=g)
+            emit(f"fig9b/{strategy}/enforce{int(frac * 1000)}",
+                 tot["wall_s"] * 1e6,
+                 f"sent={tot['sent']};accepted={tot['accepted']};"
+                 f"ticks={tot['ticks']}")
+
+
+if __name__ == "__main__":
+    main()

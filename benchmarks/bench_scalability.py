@@ -1,0 +1,32 @@
+"""Paper Fig 7: input scalability — runtime/messages vs graph size at fixed
+shard count (RMAT family + the SSSP variant)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, graph_family, run_asymp
+
+
+def main() -> None:
+    print("== Fig 7: input scalability (fixed 8 shards) ==")
+    base = None
+    for cfg in graph_family(sizes=(12, 13, 14, 15)):
+        g, _, tot = run_asymp(cfg)
+        if base is None:
+            base = (g.num_edges, tot["wall_s"], tot["sent"])
+        emit(f"fig7/cc/{cfg.name}", tot["wall_s"] * 1e6,
+             f"edges={g.num_edges};rel_edges={g.num_edges / base[0]:.1f};"
+             f"rel_time={tot['wall_s'] / base[1]:.2f};"
+             f"rel_msgs={tot['sent'] / max(base[2], 1):.2f};"
+             f"ticks={tot['ticks']}")
+    base = None
+    for cfg in graph_family(sizes=(12, 13, 14), algorithm="sssp",
+                            weighted=True):
+        g, _, tot = run_asymp(cfg)
+        if base is None:
+            base = (g.num_edges, tot["wall_s"], tot["sent"])
+        emit(f"fig7/sssp/{cfg.name}", tot["wall_s"] * 1e6,
+             f"edges={g.num_edges};rel_time={tot['wall_s'] / base[1]:.2f};"
+             f"rel_msgs={tot['sent'] / max(base[2], 1):.2f}")
+
+
+if __name__ == "__main__":
+    main()

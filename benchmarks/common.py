@@ -1,0 +1,44 @@
+"""Shared benchmark utilities. Output convention: ``name,us_per_call,derived``
+CSV rows plus human-readable tables to stdout."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs.base import GraphConfig
+from repro.core import engine as E
+from repro.core import graph as G
+
+ROWS: list[tuple] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6  # us
+
+
+def graph_family(sizes=(12, 14, 16), shards=8, algorithm="cc", **kw):
+    for log2n in sizes:
+        cfg = GraphConfig(
+            name=f"rmat{log2n}", algorithm=algorithm,
+            num_vertices=1 << log2n, avg_degree=16, generator="rmat",
+            num_shards=shards, priority="log", enforce_fraction=0.1, **kw)
+        yield cfg
+
+
+def run_asymp(cfg: GraphConfig, graph=None, **kw):
+    graph = graph or G.build_sharded_graph(cfg)
+    t0 = time.perf_counter()
+    state, totals = E.run_to_convergence(cfg, graph=graph, **kw)
+    totals["wall_s"] = time.perf_counter() - t0
+    return graph, state, totals

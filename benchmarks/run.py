@@ -1,0 +1,37 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_evolution, bench_faults, bench_kernels,
+                            bench_messages, bench_parallel, bench_priority,
+                            bench_scalability, bench_speed)
+    mods = [bench_speed, bench_scalability, bench_parallel, bench_faults,
+            bench_priority, bench_messages, bench_evolution, bench_kernels]
+    only = sys.argv[1] if len(sys.argv) > 1 else ""
+    t0 = time.time()
+    failures = 0
+    for m in mods:
+        if only and only not in m.__name__:
+            continue
+        try:
+            m.main()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"[FAIL] {m.__name__}")
+            traceback.print_exc()
+    print(f"\n== benchmarks done in {time.time() - t0:.0f}s, "
+          f"{failures} failures ==")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Quickstart: ASYMP connected components on an RMAT graph in ~20 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.configs.base import GraphConfig
+from repro.core import engine, graph, merger, programs
+
+# 1. a 16k-vertex RMAT graph (the paper's generator), 8 workers
+cfg = GraphConfig(name="quickstart", algorithm="cc", num_vertices=1 << 14,
+                  avg_degree=16, generator="rmat", num_shards=8,
+                  priority="log", enforce_fraction=0.1)
+g = graph.build_sharded_graph(cfg)
+print(f"graph: {g.num_real_vertices} vertices, {g.num_edges} edges, "
+      f"{g.num_shards} workers")
+
+# 2. propagation phase: priority-ordered asynchronous-style min-label ticks
+state, totals = engine.run_to_convergence(cfg, graph=g)
+print(f"converged in {totals['ticks']} ticks, {totals['sent']} messages "
+      f"({totals['sent'] / g.num_edges:.2f} per edge)")
+
+# 3. merger phase: extract per-vertex component ids
+labels = merger.extract(state, g, programs.get_program(cfg))
+sizes = np.bincount(np.unique(labels, return_inverse=True)[1])
+print(f"{len(sizes)} components; largest covers "
+      f"{100 * sizes.max() / len(labels):.1f}% of vertices")
+
+# 4. verify against the union-find oracle
+from repro.core.graph import cc_oracle  # noqa: E402
+import sys, os  # noqa: E402
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tests"))
+from conftest import csr_edges  # noqa: E402
+assert (labels == cc_oracle(g.num_real_vertices, csr_edges(g))).all()
+print("matches union-find oracle ✓")

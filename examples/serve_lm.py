@@ -1,0 +1,13 @@
+"""Serve a small model with batched requests (continuous batching demo).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import subprocess
+import sys
+import os
+
+env = dict(os.environ, PYTHONPATH="src")
+subprocess.run([sys.executable, "-m", "repro.launch.serve",
+                "--arch", "qwen3-4b", "--requests", "6", "--slots", "2",
+                "--prompt-len", "16", "--max-new", "12"],
+               check=True, env=env)

@@ -1,0 +1,39 @@
+"""The paper's own workload configs: ASYMP graph-mining jobs.
+
+These mirror the paper's evaluation matrix (Table 1 / §5) scaled to what this
+container can *execute*; the production-scale variants (512-shard RMAT) are
+exercised structurally via the dry-run, exactly like the LM archs.
+"""
+from repro.configs.base import GraphConfig
+
+# Paper's RMAT family: (a,b,c,d) = (0.47, 0.19, 0.19, 0.05), expected degree 32.
+RMAT_ABCD = (0.47, 0.19, 0.19, 0.05)
+
+
+def rmat(log2_nodes: int, *, shards: int = 8, algorithm: str = "cc",
+         **kw) -> GraphConfig:
+    return GraphConfig(
+        name=f"rmat{log2_nodes}-{algorithm}",
+        algorithm=algorithm,
+        num_vertices=1 << log2_nodes,
+        avg_degree=32,
+        generator="rmat",
+        rmat_abcd=RMAT_ABCD,
+        num_shards=shards,
+        **kw,
+    )
+
+
+# Executable-scale reproduction configs (container scale).
+CONFIGS: dict[str, GraphConfig] = {
+    # headline CC job — the paper's primary benchmark
+    "asymp_cc": rmat(16, algorithm="cc"),
+    # SSSP with weighted edges (paper §4.1, Fig 4)
+    "asymp_sssp": rmat(16, algorithm="sssp", weighted=True),
+    # input-scalability family (paper Fig 7)
+    "asymp_cc_small": rmat(14, algorithm="cc"),
+    "asymp_cc_large": rmat(18, algorithm="cc"),
+    # production-mesh structural config (dry-run only: 512 shards)
+    "asymp_cc_prod": rmat(26, shards=512, algorithm="cc"),
+    "asymp_sssp_prod": rmat(26, shards=512, algorithm="sssp", weighted=True),
+}

@@ -1,0 +1,1 @@
+from repro.core import engine, faults, graph, merger, programs  # noqa: F401

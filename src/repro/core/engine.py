@@ -1,0 +1,405 @@
+"""The ASYMP engine: priority-driven asynchronous-style propagation ticks.
+
+One tick per shard (Fig 1 / Fig 2 mapped to SPMD):
+  select     — per-shard priority queue: bucketized priorities (linear/log,
+               §3.5), enforcement fraction rho (§5.6), top-M cap
+  fetch      — streamed adjacency window per selected vertex (edge cursor:
+               high-degree vertices stream their list over multiple ticks —
+               the tick-level analogue of the paper's on-demand edge fetch)
+  create     — program.combine over the fetched edges
+  route      — bucket messages by destination shard into fixed-capacity
+               buffers (bounded queues); overflow => sender retries next tick
+               (backpressure); one all_to_all delivers everything
+  receive    — idempotent scatter-min; improved vertices join the frontier
+
+Two execution modes sharing the same per-shard code:
+  local  — arrays [P, ...] on one device, vmap + transpose as the exchange
+           (tests, benchmarks, fault-injection studies)
+  dist   — shard_map over a 1-D `workers` mesh with lax.all_to_all
+           (the production path; dry-run lowers it on 256/512 chips)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import GraphConfig
+from repro.core import programs as prog_mod
+from repro.core.graph import ShardedGraph, build_sharded_graph
+
+N_BUCKETS = 32
+
+
+class EngineState(NamedTuple):
+    values: jnp.ndarray  # [P, vs]
+    active: jnp.ndarray  # [P, vs] bool
+    cursor: jnp.ndarray  # [P, vs] int32 — adjacency streaming position
+    tick: jnp.ndarray  # scalar int32
+
+
+class ShardGraph(NamedTuple):
+    row_ptr: jnp.ndarray  # [P, vs+1] int32
+    col_idx: jnp.ndarray  # [P, es] int32
+    weights: Optional[jnp.ndarray]  # [P, es] f32 | None
+
+
+class TickStats(NamedTuple):
+    active: jnp.ndarray  # vertices active after tick
+    sent: jnp.ndarray  # messages sent
+    accepted: jnp.ndarray  # messages that improved a value
+    fetched: jnp.ndarray  # edges fetched (seek rate, Fig 10)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineParams:
+    """Static knobs (hashable: closed over by jit)."""
+    num_shards: int
+    vs: int
+    max_vertices_per_tick: int  # M
+    degree_window: int  # D_cap (edges streamed per vertex per tick)
+    route_capacity: int  # per-destination-shard message slots
+    enforce_fraction: float  # rho (paper: 100/10/5/2.5%)
+    priority: str  # disabled | linear | log
+    priority_scale: float  # normalization for bucketing
+
+
+def default_params(cfg: GraphConfig, graph: ShardedGraph) -> EngineParams:
+    P_, vs = graph.num_shards, graph.vs
+    budget = cfg.edge_budget or max(graph.es // 4, 256)
+    d_cap = max(min(cfg.avg_degree, 64), 4)
+    m = max(budget // d_cap, 16)
+    m = int(min(m, vs))
+    # §Perf iter G1: 1.25x slack (was 2x) — wire and buffer traffic scale
+    # with cap; overflow just retries next tick (bounded-queue semantics)
+    cap = cfg.route_capacity or max(budget // P_ + budget // (4 * P_), 64)
+    return EngineParams(
+        num_shards=P_, vs=vs, max_vertices_per_tick=m, degree_window=d_cap,
+        route_capacity=int(cap), enforce_fraction=cfg.enforce_fraction,
+        priority=cfg.priority, priority_scale=float(graph.num_vertices))
+
+
+# ======================================================================
+# Priority bucketing (§3.5: linear vs log; disabled = arbitrary order)
+# ======================================================================
+def priority_buckets(pv: jnp.ndarray, strategy: str, scale: float) -> jnp.ndarray:
+    if strategy == "disabled":
+        return jnp.zeros(pv.shape, jnp.int32)
+    x = jnp.clip(pv, 0.0, scale) / scale  # [0, 1]
+    if strategy == "linear":
+        b = jnp.floor(x * N_BUCKETS)
+    else:  # log: reserve precision at the low end (paper Fig 9b)
+        b = jnp.floor(jnp.log2(1.0 + x * (2.0 ** N_BUCKETS - 1)))
+    return jnp.clip(b, 0, N_BUCKETS - 1).astype(jnp.int32)
+
+
+# ======================================================================
+# Per-shard tick phases (operate on ONE shard's arrays)
+# ======================================================================
+def _phase1_create(prog, ep: EngineParams, values, active, cursor,
+                   row_ptr, col_idx, weights, shard_id):
+    """Select + fetch + create + route. Returns updated (active, cursor),
+    send buffers and stats."""
+    vs, M, D = ep.vs, ep.max_vertices_per_tick, ep.degree_window
+    Pn, cap = ep.num_shards, ep.route_capacity
+
+    # ---- select (priority queue with enforcement fraction) ----
+    # Sort-free selection (§Perf iter G1): bucket histogram + cumsum
+    # threshold + rank-by-cumsum replaces a [vs] argsort — the paper's
+    # bucketed queues never needed total order anyway.
+    n_active = jnp.sum(active)
+    target = jnp.clip(jnp.ceil(ep.enforce_fraction * n_active), 1, M
+                      ).astype(jnp.int32)
+    buckets = priority_buckets(prog.priority_value(values), ep.priority,
+                               ep.priority_scale)
+    hist = jnp.zeros((N_BUCKETS,), jnp.int32).at[buckets].add(
+        active.astype(jnp.int32))
+    cum = jnp.cumsum(hist)
+    thr = jnp.searchsorted(cum, target)  # first bucket covering the target
+    # strict two-tier rank: every vertex in buckets < thr outranks the
+    # threshold bucket (within a bucket, index order — the paper's queues
+    # are unordered within a bucket too)
+    low = active & (buckets < thr)
+    at_thr = active & (buckets == thr)
+    n_low = jnp.cumsum(low.astype(jnp.int32))
+    n_thr = jnp.cumsum(at_thr.astype(jnp.int32))
+    total_low = n_low[-1]
+    rank_v = jnp.where(low, n_low - 1, total_low + n_thr - 1)
+    pre = low | at_thr
+    sel_mask = pre & (rank_v < jnp.minimum(target, M))
+    # invalid slots get the out-of-bounds sentinel `vs` so downstream
+    # scatters drop them (slot-0 fill would alias a real vertex)
+    sel = jnp.full((M,), vs, jnp.int32).at[
+        jnp.where(sel_mask, rank_v, M)].set(jnp.arange(vs, dtype=jnp.int32),
+                                            mode="drop")
+    sel_valid = jnp.zeros((M,), bool).at[
+        jnp.where(sel_mask, rank_v, M)].set(True, mode="drop")
+    sel_safe = jnp.minimum(sel, vs - 1)  # for gathers
+
+    # ---- fetch adjacency window (streamed via cursor) ----
+    deg = (row_ptr[sel_safe + 1] - row_ptr[sel_safe]).astype(jnp.int32)
+    cur = cursor[sel_safe]
+    base = row_ptr[sel_safe].astype(jnp.int32) + cur
+    offs = jnp.arange(D, dtype=jnp.int32)
+    eidx = base[:, None] + offs[None, :]
+    edge_valid = sel_valid[:, None] & ((cur[:, None] + offs[None, :])
+                                       < deg[:, None])
+    eidx_safe = jnp.clip(eidx, 0, col_idx.shape[0] - 1)
+    dst = jnp.where(edge_valid, col_idx[eidx_safe], -1)  # global ids
+    w = weights[eidx_safe] if weights is not None else None
+
+    # ---- create messages ----
+    msg = jnp.broadcast_to(prog.combine(values[sel_safe][:, None], w), (M, D))
+
+    # ---- route: bucket by destination shard, bounded capacity ----
+    dst_shard = jnp.where(dst >= 0, dst // vs, Pn)  # Pn = invalid bucket
+    flat_shard = dst_shard.reshape(-1)
+    order2 = jnp.argsort(flat_shard)
+    so = flat_shard[order2]
+    starts = jnp.searchsorted(so, jnp.arange(Pn + 1))
+    rank_sorted = jnp.arange(flat_shard.shape[0]) - starts[so]
+    inv = jnp.zeros_like(order2).at[order2].set(jnp.arange(order2.shape[0]))
+    rank = rank_sorted[inv].reshape(M, D)
+
+    keep = edge_valid & (rank < cap)
+    r_safe = jnp.where(keep, rank, cap)
+    ds_safe = jnp.where(keep, dst_shard, 0)
+    send_vals = jnp.full((Pn, cap), prog.identity, prog.jdtype).at[
+        ds_safe.reshape(-1), r_safe.reshape(-1)].set(
+        msg.reshape(-1).astype(prog.jdtype), mode="drop")
+    send_ids = jnp.full((Pn, cap), -1, jnp.int32).at[
+        ds_safe.reshape(-1), r_safe.reshape(-1)].set(
+        jnp.where(keep, dst % vs, -1).reshape(-1).astype(jnp.int32),
+        mode="drop")
+
+    # ---- cursor advance: up to the first dropped edge (retry the rest) ----
+    dropped = edge_valid & ~keep
+    any_drop = dropped.any(axis=1)
+    first_drop = jnp.where(any_drop, jnp.argmax(dropped, axis=1), D)
+    advance = jnp.minimum(first_drop.astype(jnp.int32), deg - cur)
+    new_cur = cur + jnp.where(sel_valid, advance, 0)
+    done = sel_valid & (new_cur >= deg)
+    upd_idx = jnp.where(sel_valid, sel, vs)  # OOB -> dropped
+    cursor = cursor.at[upd_idx].set(jnp.where(done, 0, new_cur), mode="drop")
+    active = active.at[upd_idx].set(~done, mode="drop")
+
+    sent = jnp.sum(keep)
+    fetched = jnp.sum(edge_valid)
+    return active, cursor, send_vals, send_ids, sent, fetched
+
+
+def _phase2_receive(prog, ep: EngineParams, values, active, cursor,
+                    recv_vals, recv_ids):
+    """Deliver: idempotent scatter-min; improved vertices activate."""
+    vs = ep.vs
+    ids = recv_ids.reshape(-1)
+    vals = recv_vals.reshape(-1).astype(prog.jdtype)
+    valid = ids >= 0
+    idx = jnp.where(valid, ids, vs)  # vs -> dropped (out of bounds)
+    old = values
+    values = values.at[idx].min(vals, mode="drop")
+    accepted = jnp.sum(valid & (vals < old[jnp.clip(idx, 0, vs - 1)]))
+    changed = values < old
+    active = active | changed
+    cursor = jnp.where(changed, 0, cursor)
+    return values, active, cursor, accepted
+
+
+# ======================================================================
+# Local (single-device, vmapped) execution
+# ======================================================================
+def make_local_tick(prog, ep: EngineParams, weighted: bool):
+    def tick(state: EngineState, g: ShardGraph):
+        shard_ids = jnp.arange(ep.num_shards)
+
+        def p1(values, active, cursor, row_ptr, col_idx, weights, sid):
+            return _phase1_create(prog, ep, values, active, cursor, row_ptr,
+                                  col_idx, weights, sid)
+
+        w = g.weights if weighted else None
+        if w is None:
+            p1v = jax.vmap(lambda v, a, c, r, ci, s:
+                           p1(v, a, c, r, ci, None, s))
+            active, cursor, sv, si, sent, fetched = p1v(
+                state.values, state.active, state.cursor, g.row_ptr,
+                g.col_idx, shard_ids)
+        else:
+            p1v = jax.vmap(p1)
+            active, cursor, sv, si, sent, fetched = p1v(
+                state.values, state.active, state.cursor, g.row_ptr,
+                g.col_idx, w, shard_ids)
+
+        # exchange: send[p][q] -> recv[q][p]
+        rv = jnp.swapaxes(sv, 0, 1)
+        ri = jnp.swapaxes(si, 0, 1)
+
+        p2v = jax.vmap(lambda v, a, c, rvals, rids:
+                       _phase2_receive(prog, ep, v, a, c, rvals, rids))
+        values, active, cursor, accepted = p2v(state.values, active, cursor,
+                                               rv, ri)
+        stats = TickStats(jnp.sum(active), jnp.sum(sent), jnp.sum(accepted),
+                          jnp.sum(fetched))
+        return EngineState(values, active, cursor, state.tick + 1), stats, (sv, si)
+
+    return jax.jit(tick)
+
+
+# ======================================================================
+# Distributed (shard_map over `workers`) execution
+# ======================================================================
+def make_dist_tick(prog, ep: EngineParams, mesh: Mesh, weighted: bool):
+    axis = "workers"
+
+    def local_fn(values, active, cursor, tick, row_ptr, col_idx, weights):
+        sid = jax.lax.axis_index(axis)
+        values, active, cursor = values[0], active[0], cursor[0]
+        w = weights[0] if weighted else None
+        active, cursor, sv, si, sent, fetched = _phase1_create(
+            prog, ep, values, active, cursor, row_ptr[0], col_idx[0], w, sid)
+        rv = jax.lax.all_to_all(sv, axis, 0, 0, tiled=True)
+        ri = jax.lax.all_to_all(si, axis, 0, 0, tiled=True)
+        values, active, cursor, accepted = _phase2_receive(
+            prog, ep, values, active, cursor, rv, ri)
+        n_active = jax.lax.psum(jnp.sum(active), axis)
+        sent = jax.lax.psum(sent, axis)
+        accepted = jax.lax.psum(accepted, axis)
+        fetched = jax.lax.psum(fetched, axis)
+        return (values[None], active[None], cursor[None], tick + 1,
+                TickStats(n_active, sent, accepted, fetched))
+
+    w_spec = P(axis) if weighted else P()
+
+    def tick_fn(state: EngineState, g: ShardGraph):
+        sm = shard_map(
+            local_fn, mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis), P(), P(axis), P(axis),
+                      P(axis) if weighted else P()),
+            out_specs=(P(axis), P(axis), P(axis), P(),
+                       TickStats(P(), P(), P(), P())),
+            check_vma=False)
+        weights = g.weights if weighted else jnp.zeros((), jnp.float32)
+        values, active, cursor, tick, stats = sm(
+            state.values, state.active, state.cursor, state.tick,
+            g.row_ptr, g.col_idx, weights)
+        return EngineState(values, active, cursor, tick), stats
+
+    return tick_fn
+
+
+# ======================================================================
+# Host driver helpers
+# ======================================================================
+def init_state(prog, graph: ShardedGraph) -> EngineState:
+    P_, vs = graph.num_shards, graph.vs
+    gids = jnp.arange(P_ * vs, dtype=jnp.int32).reshape(P_, vs)
+    valid = gids < graph.num_real_vertices
+    values, active = prog.init(gids, valid)
+    return EngineState(values, active,
+                       jnp.zeros((P_, vs), jnp.int32),
+                       jnp.zeros((), jnp.int32))
+
+
+def to_device_graph(graph: ShardedGraph) -> ShardGraph:
+    return ShardGraph(
+        jnp.asarray(graph.row_ptr, jnp.int32),
+        jnp.asarray(np.where(graph.col_idx < 0, -1, graph.col_idx), jnp.int32),
+        jnp.asarray(graph.weights) if graph.weights is not None else None)
+
+
+def run_to_convergence(cfg: GraphConfig, *, graph: Optional[ShardedGraph] = None,
+                       prog=None, params: Optional[EngineParams] = None,
+                       max_ticks: Optional[int] = None,
+                       collect_log: bool = False,
+                       fault_plan=None):
+    """Host loop (the propagation phase). Returns (state, metrics dict)."""
+    from repro.core import faults as faults_mod
+
+    graph = graph or build_sharded_graph(cfg)
+    prog = prog or prog_mod.get_program(cfg)
+    ep = params or default_params(cfg, graph)
+    g = to_device_graph(graph)
+    tick_fn = make_local_tick(prog, ep, prog.weighted)
+    state = init_state(prog, graph)
+    max_ticks = max_ticks or cfg.max_ticks
+
+    log = []
+    totals = {"ticks": 0, "sent": 0, "accepted": 0, "fetched": 0,
+              "replayed": 0, "failures": 0}
+    fault_mgr = faults_mod.FaultManager(cfg, graph, prog, ep) \
+        if fault_plan is not None else None
+
+    for t in range(max_ticks):
+        state, stats, send_bufs = tick_fn(state, g)
+        n_active = int(stats.active)
+        totals["ticks"] += 1
+        totals["sent"] += int(stats.sent)
+        totals["accepted"] += int(stats.accepted)
+        totals["fetched"] += int(stats.fetched)
+        if fault_mgr is not None:
+            fault_mgr.record(t, state, send_bufs)
+            state, extra = fault_mgr.maybe_fail(t, state, fault_plan)
+            totals["replayed"] += extra.get("replayed", 0)
+            totals["failures"] += extra.get("failures", 0)
+            if extra.get("failures"):
+                n_active = int(jnp.sum(state.active))
+        if collect_log:
+            log.append({"tick": t, "active": n_active,
+                        "sent": int(stats.sent),
+                        "accepted": int(stats.accepted),
+                        "fetched": int(stats.fetched)})
+        if n_active == 0:
+            break
+    totals["converged"] = n_active == 0
+    totals["log"] = log
+    return state, totals
+
+
+# ======================================================================
+# Dry-run entry (launch/dryrun.py --graph)
+# ======================================================================
+def lower_tick_for_mesh(cfg: GraphConfig, mesh_2d, n_workers: int):
+    """Lower+compile the distributed tick on a 1-D workers view of the
+    production mesh (the graph engine shards vertices over every chip)."""
+    devs = np.asarray(mesh_2d.devices).reshape(-1)[:n_workers]
+    mesh = Mesh(devs, ("workers",),
+                axis_types=(jax.sharding.AxisType.Auto,))
+    cfg = dataclasses.replace(cfg, num_shards=n_workers)
+    prog = prog_mod.get_program(cfg)
+    vs = -(-cfg.num_vertices // n_workers)
+    es = max(cfg.num_edges * 2 // n_workers, 1)  # symmetrized estimate
+    ep = EngineParams(
+        num_shards=n_workers, vs=vs,
+        max_vertices_per_tick=min(max((cfg.edge_budget or es // 4)
+                                      // max(cfg.avg_degree, 1), 16), vs),
+        degree_window=max(min(cfg.avg_degree, 64), 4),
+        route_capacity=max(((cfg.edge_budget or es // 4) * 5)
+                           // (4 * n_workers), 64),
+        enforce_fraction=cfg.enforce_fraction, priority=cfg.priority,
+        priority_scale=float(cfg.num_vertices))
+    tick_fn = make_dist_tick(prog, ep, mesh, prog.weighted)
+
+    sh = lambda spec: NamedSharding(mesh, spec)
+    Pw = P("workers")
+    state = EngineState(
+        jax.ShapeDtypeStruct((n_workers, vs), prog.jdtype, sharding=sh(Pw)),
+        jax.ShapeDtypeStruct((n_workers, vs), jnp.bool_, sharding=sh(Pw)),
+        jax.ShapeDtypeStruct((n_workers, vs), jnp.int32, sharding=sh(Pw)),
+        jax.ShapeDtypeStruct((), jnp.int32, sharding=sh(P())),
+    )
+    g = ShardGraph(
+        jax.ShapeDtypeStruct((n_workers, vs + 1), jnp.int32, sharding=sh(Pw)),
+        jax.ShapeDtypeStruct((n_workers, es), jnp.int32, sharding=sh(Pw)),
+        jax.ShapeDtypeStruct((n_workers, es), jnp.float32, sharding=sh(Pw))
+        if prog.weighted else None,
+    )
+    compiled = jax.jit(tick_fn, donate_argnums=(0,)).lower(state, g).compile()
+    info = {"workers": n_workers, "vs": vs, "es": es,
+            "M": ep.max_vertices_per_tick, "D": ep.degree_window,
+            "cap": ep.route_capacity}
+    return compiled, info

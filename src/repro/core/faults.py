@@ -1,0 +1,149 @@
+"""Fault injection + recovery for the ASYMP engine (paper §3.4, §5.5).
+
+Implements the paper's three-step mechanism:
+  1. writing checkpoints  — periodic per-shard snapshots of vertex state
+     (values + cursors + frontier), taken asynchronously by the host driver;
+  2. recovering itself    — on an injected failure the shard's state rolls
+     back to its own latest snapshot (other shards keep their newer state —
+     there is NO global rollback, unlike BSP checkpointing);
+  3. requesting lost msgs — peers replay their logged outgoing buffers for
+     ticks since that shard's snapshot (bounded ring log); beyond the log
+     horizon they instead re-activate every boundary vertex with an edge into
+     the failed shard — strictly correct by self-stabilization, at the cost
+     of extra messages (the same trade the paper describes).
+
+`FaultPlan` encodes the paper's §5.5 experiments: fail x% of shards once /
+all once / all twice over the course of the run ("rolling failures").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GraphConfig
+from repro.core.engine import EngineParams, EngineState
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """fail_fraction: 0.5 / 1.0 / 2.0 = paper's 50% / 100% / 200% scenarios."""
+    fail_fraction: float
+    start_tick: int = 4
+    every: int = 6  # ticks between rolling failure batches
+    batch: int = 1  # shards failed per batch
+    seed: int = 0
+
+    def schedule(self, num_shards: int) -> dict[int, list[int]]:
+        total = int(round(self.fail_fraction * num_shards))
+        rng = np.random.default_rng(self.seed)
+        shards = [int(s) for s in rng.permutation(num_shards)]
+        while len(shards) < total:  # >100%: shards fail multiple times
+            shards += [int(s) for s in rng.permutation(num_shards)]
+        shards = shards[:total]
+        out: dict[int, list[int]] = {}
+        t = self.start_tick
+        i = 0
+        while i < total:
+            out[t] = shards[i: i + self.batch]
+            i += self.batch
+            t += self.every
+        return out
+
+
+class FaultManager:
+    def __init__(self, cfg: GraphConfig, graph, prog, ep: EngineParams):
+        self.cfg, self.graph, self.prog, self.ep = cfg, graph, prog, ep
+        self.ckpt_every = cfg.checkpoint_every
+        self.log_ticks = cfg.replay_log_ticks
+        # per-shard checkpoint: tick -> (values, active, cursor) rows
+        self.ckpt_tick = np.full(graph.num_shards, -1, np.int64)
+        self.ckpt: dict[int, tuple] = {}
+        # ring log of outgoing buffers: tick -> (send_vals, send_ids) numpy
+        self.msg_log: dict[int, tuple] = {}
+        self._schedule: Optional[dict[int, list[int]]] = None
+
+    # ------------------------------------------------------------------
+    def record(self, t: int, state: EngineState, send_bufs) -> None:
+        if t % self.ckpt_every == 0:
+            vals = np.asarray(state.values)
+            act = np.asarray(state.active)
+            cur = np.asarray(state.cursor)
+            for p in range(self.graph.num_shards):
+                self.ckpt[p] = (vals[p].copy(), act[p].copy(), cur[p].copy())
+                self.ckpt_tick[p] = t
+        sv, si = send_bufs
+        self.msg_log[t] = (np.asarray(sv), np.asarray(si))
+        for old in list(self.msg_log):
+            if old < t - self.log_ticks:
+                del self.msg_log[old]
+
+    # ------------------------------------------------------------------
+    def maybe_fail(self, t: int, state: EngineState, plan: FaultPlan):
+        if self._schedule is None:
+            self._schedule = plan.schedule(self.graph.num_shards)
+        shards = self._schedule.get(t, [])
+        extra = {"failures": 0, "replayed": 0}
+        for p in shards:
+            state, replayed = self.fail_shard(t, state, p)
+            extra["failures"] += 1
+            extra["replayed"] += replayed
+        return state, extra
+
+    def fail_shard(self, t: int, state: EngineState, p: int
+                   ) -> tuple[EngineState, int]:
+        """Kill shard p: wipe its state, restore from its checkpoint, replay
+        peer messages (or boundary re-activation beyond the log horizon)."""
+        values = np.asarray(state.values).copy()
+        active = np.asarray(state.active).copy()
+        cursor = np.asarray(state.cursor).copy()
+
+        # (2) recover own state from the last committed snapshot
+        if p in self.ckpt:
+            v, a, c = self.ckpt[p]
+            values[p], active[p], cursor[p] = v, a, c
+            since = int(self.ckpt_tick[p])
+        else:  # no checkpoint yet -> re-init this shard
+            gids = np.arange(p * self.graph.vs, (p + 1) * self.graph.vs,
+                             dtype=np.int64)
+            valid = gids < self.graph.num_real_vertices
+            v0, a0 = self.prog.init(jnp.asarray(gids, jnp.int32),
+                                    jnp.asarray(valid))
+            values[p], active[p] = np.asarray(v0), np.asarray(a0)
+            cursor[p] = 0
+            since = -1
+
+        # (3) request lost messages
+        replayed = 0
+        lost = [tt for tt in range(since + 1, t + 1)]
+        if lost and all(tt in self.msg_log for tt in lost):
+            ids_np = values  # placate linters
+            for tt in lost:
+                sv, si = self.msg_log[tt]
+                # peers re-send everything they produced for shard p at tt
+                vals_in = sv[:, p, :].reshape(-1)  # [P*cap]
+                ids_in = si[:, p, :].reshape(-1)
+                valid = ids_in >= 0
+                replayed += int(valid.sum())
+                idx = np.where(valid, ids_in, 0)
+                upd = np.minimum.reduceat  # noqa — done manually below
+                for i in np.nonzero(valid)[0]:
+                    j = int(ids_in[i])
+                    if vals_in[i] < values[p, j]:
+                        values[p, j] = vals_in[i]
+                        active[p, j] = True
+                        cursor[p, j] = 0
+        else:
+            # log horizon exceeded: self-stabilizing fallback — peers
+            # re-activate every vertex with an edge into shard p
+            for q in range(self.graph.num_shards):
+                if q == p:
+                    continue
+                b = self.graph.boundary[q, p]
+                active[q] |= b
+                cursor[q] = np.where(b, 0, cursor[q])
+        return EngineState(jnp.asarray(values), jnp.asarray(active),
+                           jnp.asarray(cursor), state.tick), replayed

@@ -1,0 +1,213 @@
+"""Sharded CSR graphs + generators (RMAT per the paper, ER, grid, chain, star).
+
+Vertices are partitioned into P contiguous ranges ("workers"); each shard
+holds the out-edges of its vertices in CSR form, padded to the max per-shard
+edge count so every shard array has identical shape (SPMD requirement).
+Boundary maps (which local vertices have edges into shard q) are precomputed
+for the fault-recovery fallback path (DESIGN.md C3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.configs.base import GraphConfig
+
+
+@dataclasses.dataclass
+class ShardedGraph:
+    """P-way vertex-partitioned CSR (host arrays; jnp conversion by engine)."""
+
+    num_vertices: int  # global, includes padding to P*vs
+    num_real_vertices: int
+    num_edges: int
+    num_shards: int
+    vs: int  # vertices per shard
+    row_ptr: np.ndarray  # [P, vs+1] int64 (local edge offsets)
+    col_idx: np.ndarray  # [P, es] int32 global dst ids (padded with -1)
+    weights: Optional[np.ndarray]  # [P, es] f32 or None
+    edge_counts: np.ndarray  # [P] real edges per shard
+    boundary: np.ndarray  # [P, P, vs] bool: boundary[p, q, v] = v has edge -> q
+
+    @property
+    def es(self) -> int:
+        return self.col_idx.shape[1]
+
+    def degrees(self) -> np.ndarray:
+        return self.row_ptr[:, 1:] - self.row_ptr[:, :-1]  # [P, vs]
+
+
+# ======================================================================
+# Generators (host-side numpy; deterministic per seed)
+# ======================================================================
+def rmat_edges(log2_n: int, avg_degree: int, abcd, seed: int) -> np.ndarray:
+    """R-MAT edge list [(src, dst)] (paper §5.1: recursive quadrant model)."""
+    n_bits = log2_n
+    m = (1 << log2_n) * avg_degree
+    rng = np.random.default_rng(seed)
+    a, b, c, d = abcd
+    # per-bit quadrant choice for all edges at once
+    src = np.zeros(m, dtype=np.int64)
+    dst = np.zeros(m, dtype=np.int64)
+    p_right = np.array([b + d, 1.0])  # P(right) overall = b+d
+    for bit in range(n_bits):
+        r = rng.random(m)
+        # quadrant probabilities with slight noise (standard RMAT smoothing)
+        right = r < (b + d)
+        r2 = rng.random(m)
+        down_given_right = r2 < (d / max(b + d, 1e-9))
+        down_given_left = r2 < (c / max(a + c, 1e-9))
+        down = np.where(right, down_given_right, down_given_left)
+        src = (src << 1) | down.astype(np.int64)
+        dst = (dst << 1) | right.astype(np.int64)
+    edges = np.stack([src, dst], axis=1)
+    return edges
+
+
+def er_edges(n: int, avg_degree: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    m = n * avg_degree
+    return rng.integers(0, n, size=(m, 2), dtype=np.int64)
+
+
+def grid_edges(n: int) -> np.ndarray:
+    side = int(np.sqrt(n))
+    idx = np.arange(side * side).reshape(side, side)
+    right = np.stack([idx[:, :-1].ravel(), idx[:, 1:].ravel()], axis=1)
+    down = np.stack([idx[:-1, :].ravel(), idx[1:, :].ravel()], axis=1)
+    return np.concatenate([right, down], axis=0)
+
+
+def chain_edges(n: int) -> np.ndarray:
+    v = np.arange(n - 1)
+    return np.stack([v, v + 1], axis=1)
+
+
+def star_edges(n: int) -> np.ndarray:
+    v = np.arange(1, n)
+    return np.stack([np.zeros(n - 1, np.int64), v], axis=1)
+
+
+GENERATORS = {"rmat": None, "er": None, "grid": None, "chain": None,
+              "star": None}
+
+
+def generate_edges(cfg: GraphConfig) -> np.ndarray:
+    n = cfg.num_vertices
+    if cfg.generator == "rmat":
+        log2n = int(np.log2(n))
+        return rmat_edges(log2n, cfg.avg_degree, cfg.rmat_abcd, cfg.seed)
+    if cfg.generator == "er":
+        return er_edges(n, cfg.avg_degree, cfg.seed)
+    if cfg.generator == "grid":
+        return grid_edges(n)
+    if cfg.generator == "chain":
+        return chain_edges(n)
+    if cfg.generator == "star":
+        return star_edges(n)
+    raise ValueError(cfg.generator)
+
+
+# ======================================================================
+def build_sharded_graph(cfg: GraphConfig,
+                        edges: Optional[np.ndarray] = None,
+                        symmetrize: bool = True) -> ShardedGraph:
+    """Edge list -> P-way padded CSR (+ reverse edges for undirected algos)."""
+    P = cfg.num_shards
+    if edges is None:
+        edges = generate_edges(cfg)
+    n = int(cfg.num_vertices)
+    if symmetrize:
+        edges = np.concatenate([edges, edges[:, ::-1]], axis=0)
+    # drop self-loops, dedup
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    edges = np.unique(edges, axis=0)
+    vs = -(-n // P)
+    n_pad = vs * P
+
+    src, dst = edges[:, 0], edges[:, 1]
+    shard = src // vs
+    order = np.lexsort((dst, src))
+    src, dst, shard = src[order], dst[order], shard[order]
+
+    counts = np.bincount(shard, minlength=P)
+    es = max(int(counts.max()), 1)
+    row_ptr = np.zeros((P, vs + 1), dtype=np.int64)
+    col_idx = np.full((P, es), -1, dtype=np.int64)
+    weights = None
+    if cfg.weighted:
+        rng = np.random.default_rng(cfg.seed + 7)
+        w_all = rng.uniform(0.1, 1.0, size=len(src)).astype(np.float32)
+        weights = np.zeros((P, es), dtype=np.float32)
+
+    start = 0
+    for p in range(P):
+        cnt = int(counts[p])
+        s_loc = src[start: start + cnt] - p * vs
+        col_idx[p, :cnt] = dst[start: start + cnt]
+        if weights is not None:
+            weights[p, :cnt] = w_all[start: start + cnt]
+        row_ptr[p] = np.searchsorted(s_loc, np.arange(vs + 1))
+        start += cnt
+
+    boundary = np.zeros((P, P, vs), dtype=bool)
+    start = 0
+    for p in range(P):
+        cnt = int(counts[p])
+        s_loc = src[start: start + cnt] - p * vs
+        d_shard = dst[start: start + cnt] // vs
+        boundary[p, d_shard, s_loc] = True
+        start += cnt
+
+    return ShardedGraph(
+        num_vertices=n_pad, num_real_vertices=n, num_edges=len(src),
+        num_shards=P, vs=vs, row_ptr=row_ptr, col_idx=col_idx,
+        weights=weights, edge_counts=counts, boundary=boundary)
+
+
+# ======================================================================
+# Host-side oracles for tests/benchmarks
+# ======================================================================
+def cc_oracle(n: int, edges: np.ndarray) -> np.ndarray:
+    """Union-find min-label connected components."""
+    parent = np.arange(n, dtype=np.int64)
+
+    def find(x):
+        root = x
+        while parent[root] != root:
+            root = parent[root]
+        while parent[x] != root:
+            parent[x], x = root, parent[x]
+        return root
+
+    for s, d in edges:
+        rs, rd = find(int(s)), find(int(d))
+        if rs != rd:
+            parent[max(rs, rd)] = min(rs, rd)
+    return np.array([find(i) for i in range(n)], dtype=np.int64)
+
+
+def sssp_oracle(n: int, edges: np.ndarray, w: np.ndarray,
+                source: int) -> np.ndarray:
+    """Dijkstra (heapq) over the symmetrized weighted graph."""
+    import heapq
+
+    adj: list[list[tuple[int, float]]] = [[] for _ in range(n)]
+    for (s, d), wt in zip(edges, w):
+        adj[int(s)].append((int(d), float(wt)))
+        adj[int(d)].append((int(s), float(wt)))
+    dist = np.full(n, np.inf)
+    dist[source] = 0.0
+    pq = [(0.0, source)]
+    while pq:
+        du, u = heapq.heappop(pq)
+        if du > dist[u]:
+            continue
+        for v, wt in adj[u]:
+            nd = du + wt
+            if nd < dist[v]:
+                dist[v] = nd
+                heapq.heappush(pq, (nd, v))
+    return dist

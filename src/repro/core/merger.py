@@ -1,0 +1,21 @@
+"""Merger phase (paper §3.1 / GetOutputString, §4): extract per-vertex output
+once the propagation phase converges."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.engine import EngineState
+from repro.core.graph import ShardedGraph
+
+
+def extract(state: EngineState, graph: ShardedGraph, prog) -> np.ndarray:
+    """Returns dense per-vertex output [num_real_vertices]."""
+    values = np.asarray(prog.output(state.values)).reshape(-1)
+    return values[: graph.num_real_vertices]
+
+
+def output_table(state: EngineState, graph: ShardedGraph, prog
+                 ) -> list[tuple[int, str]]:
+    """The paper's output SSTable analogue: (vertex id, output string)."""
+    vals = extract(state, graph, prog)
+    return [(i, str(v)) for i, v in enumerate(vals)]

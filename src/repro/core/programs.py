@@ -1,0 +1,108 @@
+"""Vertex programs (the paper's user API: Init / CreateMessage /
+ReceiveMessage / GetOutputString, §4).
+
+A program is self-stabilizing iff its update is idempotent and commutative
+(paper §3.3) — min-semiring programs (CC, SSSP, BFS) are; they tolerate
+arbitrary message order, duplication and replay, which is what makes the
+lockless engine and the replay-based fault recovery correct.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+
+INT_INF = jnp.iinfo(jnp.int32).max
+F32_INF = jnp.float32(jnp.inf)
+
+
+@dataclasses.dataclass(frozen=True)
+class VertexProgram:
+    name: str
+    dtype: str  # "int32" | "float32"
+    identity: float  # reduce identity (min-semiring: +inf)
+    weighted: bool
+    # init(global_ids [vs], valid [vs]) -> (values, active)
+    init: Callable
+    # combine(src_value [M,1], weight [M,D] | None) -> message values [M,D]
+    combine: Callable
+    # priority_value(values) -> float32 score, lower = propagate sooner
+    priority_value: Callable
+    # output(values) -> final per-vertex output
+    output: Callable = staticmethod(lambda v: v)
+
+    @property
+    def jdtype(self):
+        return jnp.int32 if self.dtype == "int32" else jnp.float32
+
+
+def connected_components() -> VertexProgram:
+    """Fig 3: state = cluster_id (min vertex id in component)."""
+
+    def init(global_ids, valid):
+        values = jnp.where(valid, global_ids, INT_INF).astype(jnp.int32)
+        return values, valid
+
+    def combine(src_values, weights):
+        del weights
+        return src_values
+
+    def priority_value(values):
+        # low cluster ids have the greatest potential (paper §5.6)
+        return values.astype(jnp.float32)
+
+    return VertexProgram("cc", "int32", INT_INF, False, init, combine,
+                         priority_value)
+
+
+def sssp(source: int = 0) -> VertexProgram:
+    """Fig 4: state = distance from source; relax on receive."""
+
+    def init(global_ids, valid):
+        values = jnp.where(global_ids == source, 0.0, F32_INF
+                           ).astype(jnp.float32)
+        active = valid & (global_ids == source)
+        return values, active
+
+    def combine(src_values, weights):
+        w = weights if weights is not None else 1.0
+        return src_values + w
+
+    def priority_value(values):
+        return values  # small distances first (asynchronous Dijkstra)
+
+    return VertexProgram("sssp", "float32", F32_INF, True, init, combine,
+                         priority_value)
+
+
+def bfs(source: int = 0) -> VertexProgram:
+    """Hop counts = SSSP with unit weights."""
+
+    def init(global_ids, valid):
+        values = jnp.where(global_ids == source, 0, INT_INF).astype(jnp.int32)
+        active = valid & (global_ids == source)
+        return values, active
+
+    def combine(src_values, weights):
+        del weights
+        return src_values + 1
+
+    def priority_value(values):
+        return values.astype(jnp.float32)
+
+    return VertexProgram("bfs", "int32", INT_INF, False, init, combine,
+                         priority_value)
+
+
+PROGRAMS = {"cc": connected_components, "sssp": sssp, "bfs": bfs}
+
+
+def get_program(cfg) -> VertexProgram:
+    if cfg.algorithm == "cc":
+        return connected_components()
+    if cfg.algorithm == "sssp":
+        return sssp(0)
+    if cfg.algorithm == "bfs":
+        return bfs(0)
+    raise ValueError(cfg.algorithm)

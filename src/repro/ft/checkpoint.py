@@ -1,0 +1,213 @@
+"""ASYMP-style asynchronous checkpointing (paper §3.4, applied framework-wide).
+
+The paper's three-step fault-tolerance design, mapped onto training/graph
+state:
+
+  1. *Writing checkpoints* — each worker periodically and asynchronously
+     saves its vertex state to disk.  Here: `CheckpointManager.save(...,
+     blocking=False)` snapshots the (device) pytree to host memory
+     synchronously (cheap) and writes to disk on a background thread; the
+     manifest is written LAST as the commit point, so a failure mid-write
+     leaves the previous checkpoint intact.
+  2. *Recovering itself* — `restore()` loads the newest committed manifest
+     and re-shards onto the *current* mesh (`device_put` with NamedSharding),
+     which is what makes elastic restarts (different worker count) work.
+  3. *Requesting lost messages* — the graph engine replays peer message logs
+     (core/faults.py); the trainer replays data-pipeline offsets recorded in
+     the same manifest (exactly-once batch semantics).
+
+Format: one .npz per pytree leaf-group + manifest.json describing the tree,
+shapes, dtypes and user metadata.  No framework dependencies.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten_with_paths(tree) -> dict[str, Any]:
+    flat = {}
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                walk(f"{prefix}{SEP}{k}" if prefix else str(k), node[k])
+        elif isinstance(node, (list, tuple)) and not hasattr(node, "_fields"):
+            for i, v in enumerate(node):
+                walk(f"{prefix}{SEP}{i}" if prefix else str(i), v)
+        elif hasattr(node, "_fields"):  # NamedTuple
+            for k in node._fields:
+                walk(f"{prefix}{SEP}{k}" if prefix else str(k), getattr(node, k))
+        elif node is None:
+            flat[prefix + "::none"] = None
+        else:
+            flat[prefix] = node
+
+    walk("", tree)
+    return flat
+
+
+def _tree_structure(tree):
+    """JSON-serializable structure descriptor."""
+    if isinstance(tree, dict):
+        return {"__kind__": "dict",
+                "items": {k: _tree_structure(v) for k, v in tree.items()}}
+    if hasattr(tree, "_fields"):
+        return {"__kind__": "namedtuple", "name": type(tree).__name__,
+                "fields": {k: _tree_structure(getattr(tree, k))
+                           for k in tree._fields}}
+    if isinstance(tree, (list, tuple)):
+        return {"__kind__": "tuple",
+                "items": [_tree_structure(v) for v in tree]}
+    if tree is None:
+        return {"__kind__": "none"}
+    return {"__kind__": "leaf"}
+
+
+# Registry of NamedTuple types we may need to rebuild on restore.
+def _named_tuple_registry():
+    from repro.models.attention import KVCache
+    from repro.models.encdec import DecLayerCache
+    from repro.models.ssm import SSMCache
+    from repro.models.transformer import LayerCache
+    from repro.train.optimizer import AdafactorState, AdamWState
+    from repro.train.trainer import TrainState
+    return {c.__name__: c for c in (KVCache, SSMCache, LayerCache,
+                                    DecLayerCache, AdamWState, AdafactorState,
+                                    TrainState)}
+
+
+def _rebuild(struct, leaves: dict, prefix=""):
+    kind = struct["__kind__"]
+    if kind == "dict":
+        return {k: _rebuild(v, leaves, f"{prefix}{SEP}{k}" if prefix else str(k))
+                for k, v in struct["items"].items()}
+    if kind == "namedtuple":
+        cls = _named_tuple_registry().get(struct["name"])
+        vals = {k: _rebuild(v, leaves, f"{prefix}{SEP}{k}" if prefix else str(k))
+                for k, v in struct["fields"].items()}
+        return cls(**vals) if cls else vals
+    if kind == "tuple":
+        return tuple(_rebuild(v, leaves, f"{prefix}{SEP}{i}" if prefix else str(i))
+                     for i, v in enumerate(struct["items"]))
+    if kind == "none":
+        return None
+    return leaves[prefix]
+
+
+class CheckpointManager:
+    """Async, manifest-committed checkpoints with retention."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree, metadata: Optional[dict] = None,
+             blocking: bool = True) -> None:
+        """Snapshot to host now; write to disk (a)synchronously."""
+        host = jax.tree.map(lambda x: np.asarray(x), tree)
+        struct = _tree_structure(tree)
+        if blocking:
+            self._write(step, host, struct, metadata or {})
+        else:
+            self.wait()  # at most one in-flight write (bounded, like ASYMP)
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, struct, metadata or {}),
+                daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree, struct, metadata: dict) -> None:
+        with self._lock:
+            tmp = os.path.join(self.dir, f".tmp_step_{step}_{time.time_ns()}")
+            os.makedirs(tmp, exist_ok=True)
+            flat = _flatten_with_paths(host_tree)
+            arrays = {k: v for k, v in flat.items() if v is not None}
+            # npz has no bfloat16: store bit-exact uint16 views + dtype map
+            dtypes = {}
+            packed = {}
+            for k, v in arrays.items():
+                a = np.asarray(v)
+                dtypes[k] = str(a.dtype)
+                if a.dtype.kind == "V" or str(a.dtype) == "bfloat16":
+                    a = a.view(np.uint16)
+                    dtypes[k] = "bfloat16"
+                packed[k] = a
+            metadata = dict(metadata)
+            metadata["__dtypes__"] = dtypes
+            np.savez(os.path.join(tmp, "arrays.npz"), **packed)
+            final = os.path.join(self.dir, f"step_{step:010d}")
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            manifest = {"step": step, "structure": struct,
+                        "metadata": metadata, "time": time.time()}
+            # manifest written last = commit point
+            with open(os.path.join(final, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            self._gc()
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and os.path.exists(
+                    os.path.join(self.dir, name, "manifest.json")):
+                out.append(int(name[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None, shardings=None
+                ) -> tuple[Any, dict]:
+        """Returns (tree, metadata). ``shardings``: optional pytree of
+        NamedShardings (or a callable leaf-path->sharding) for elastic
+        re-sharding onto the current mesh."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        dtypes = manifest["metadata"].get("__dtypes__", {})
+        with np.load(os.path.join(d, "arrays.npz")) as z:
+            leaves = {}
+            for k in z.files:
+                a = z[k]
+                if dtypes.get(k) == "bfloat16":
+                    import ml_dtypes
+                    a = a.view(ml_dtypes.bfloat16)
+                leaves[k] = a
+        tree = _rebuild(manifest["structure"], leaves)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s) if s is not None else
+                jax.numpy.asarray(x), tree, shardings)
+        else:
+            tree = jax.tree.map(jax.numpy.asarray, tree)
+        return tree, manifest["metadata"]

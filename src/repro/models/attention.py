@@ -1,0 +1,453 @@
+"""Attention flavours: GQA/MQA, sliding-window, MLA — train/prefill/decode.
+
+Three execution paths, chosen by shape:
+  * dense masked attention    — short sequences (<= FLASH_THRESHOLD)
+  * flash-scan                — long prefill: lax.scan over KV chunks with an
+                                online-softmax carry (bounded live memory)
+  * blocked SWA               — sliding-window prefill: attends self+previous
+                                block only -> true sub-quadratic FLOPs
+  * decode                    — q_len==1 dense read over the KV cache
+
+MLA (deepseek-v3) keeps the *compressed* c_kv cache and uses the absorbed
+formulation for decode (q_nope folded through k_up so scores are taken
+directly against the 576-wide compressed cache — the production trick that
+makes MLA decode memory-light).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import shard
+from repro.models.flags import scan_unroll_len
+from repro.models.layers import Param, apply_rope, mk, rms_norm
+
+FLASH_THRESHOLD = 2048  # above this, causal attention runs the flash-scan path
+FLASH_CHUNK = 512
+NEG_INF = -1e30
+
+
+# ======================================================================
+# Parameter init
+# ======================================================================
+def init_attention(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    if cfg.use_mla:
+        p = {
+            "q_down": mk(ks[0], (d, cfg.q_lora_rank), ("fsdp", "lora")),
+            "q_down_norm": Param(jnp.ones((cfg.q_lora_rank,), jnp.float32), (None,)),
+            "q_up": mk(ks[1], (cfg.q_lora_rank,
+                               cfg.num_heads * (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)),
+                       ("lora", "q_proj")),
+            "kv_down": mk(ks[2], (d, cfg.kv_lora_rank + cfg.qk_rope_head_dim),
+                          ("fsdp", "lora")),
+            "kv_down_norm": Param(jnp.ones((cfg.kv_lora_rank,), jnp.float32), (None,)),
+            "k_up": mk(ks[3], (cfg.kv_lora_rank, cfg.num_heads * cfg.qk_nope_head_dim),
+                       ("lora", "q_proj")),
+            "v_up": mk(ks[4], (cfg.kv_lora_rank, cfg.num_heads * cfg.v_head_dim),
+                       ("lora", "q_proj")),
+            "w_o": mk(ks[5], (cfg.num_heads * cfg.v_head_dim, d), ("q_proj", "fsdp")),
+        }
+        return p
+    p = {
+        "w_q": mk(ks[0], (d, cfg.num_heads * hd), ("fsdp", "q_proj")),
+        "w_k": mk(ks[1], (d, cfg.num_kv_heads * hd), ("fsdp", "kv_proj")),
+        "w_v": mk(ks[2], (d, cfg.num_kv_heads * hd), ("fsdp", "kv_proj")),
+        "w_o": mk(ks[3], (cfg.num_heads * hd, d), ("q_proj", "fsdp")),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = Param(jnp.ones((hd,), jnp.float32), (None,))
+        p["k_norm"] = Param(jnp.ones((hd,), jnp.float32), (None,))
+    return p
+
+
+# ======================================================================
+# Caches
+# ======================================================================
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # [B, S_max, Hkv, hd]   (MLA: [B, S_max, kv_lora+rope])
+    v: Optional[jnp.ndarray]  # None for MLA (cache is compressed)
+    pos: jnp.ndarray  # scalar int32 — filled length (uniform batch)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, s_max: int,
+                  window: int = 0) -> KVCache:
+    s = min(s_max, window) if window else s_max
+    if cfg.use_mla:
+        c = jnp.zeros((batch, s, cfg.kv_lora_rank + cfg.qk_rope_head_dim),
+                      jnp.bfloat16)
+        return KVCache(c, None, jnp.zeros((), jnp.int32))
+    shape = (batch, s, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, jnp.bfloat16), jnp.zeros(shape, jnp.bfloat16),
+                   jnp.zeros((), jnp.int32))
+
+
+# ======================================================================
+# Core score/value computation (GQA-aware)
+# ======================================================================
+def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """q [B,Sq,Hq,hd], k [B,Sk,Hkv,hd] -> scores [B,Hkv,rep,Sq,Sk] (f32)."""
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    rep = Hq // Hkv
+    qr = q.reshape(B, Sq, Hkv, rep, hd)
+    s = jnp.einsum("bqhrd,bkhd->bhrqk", qr, k, precision=jax.lax.Precision.DEFAULT)
+    return s.astype(jnp.float32) / math.sqrt(hd)
+
+def _gqa_values(p: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """p [B,Hkv,rep,Sq,Sk], v [B,Sk,Hkv,hd] -> [B,Sq,Hq,hd]."""
+    B, Hkv, rep, Sq, Sk = p.shape
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", p.astype(v.dtype), v)
+    return out.reshape(B, Sq, Hkv * rep, -1)
+
+
+def dense_attention(q, k, v, mask) -> jnp.ndarray:
+    """mask [B,1,1,Sq,Sk] or broadcastable; True = attend."""
+    s = _gqa_scores(q, k)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return _gqa_values(p, v)
+
+
+def _chunk_mask(ci, chunk, Sk, q_pos, causal):
+    """valid-key mask [Sq, chunk] (or [chunk] when not causal)."""
+    kv_pos = ci * chunk + jnp.arange(chunk)
+    valid = kv_pos < Sk
+    if causal:
+        return valid[None, :] & (kv_pos[None, :] <= q_pos[:, None])
+    return valid
+
+
+def _flash_scan(q, k, v, causal, q_offset, chunk):
+    """Online-softmax forward. Returns (out [B,Sq,Hq,dv], lse [B,Hkv,rep,Sq])."""
+    B, Sq, Hq, hd = q.shape
+    Sk, Hkv, dv = k.shape[1], k.shape[2], v.shape[-1]
+    rep = Hq // Hkv
+    n_chunks = -(-Sk // chunk)
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, Hkv, dv).transpose(1, 0, 2, 3, 4)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        ci, (kb, vb) = inp
+        s = _gqa_scores(q, kb)  # [B,Hkv,rep,Sq,chunk] f32
+        mask = _chunk_mask(ci, chunk, Sk, q_pos, causal)
+        s = jnp.where(mask[None, None, None] if causal
+                      else mask[None, None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bhrqk,bkhd->bhrqd", p.astype(vb.dtype), vb
+                        ).astype(jnp.float32)
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, rep, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, rep, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, rep, Sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (jnp.arange(n_chunks), (kc, vc)),
+                                  unroll=scan_unroll_len(n_chunks))
+    l_safe = jnp.maximum(l, 1e-30)
+    out = acc / l_safe[..., None]
+    lse = m + jnp.log(l_safe)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, dv).astype(q.dtype)
+    return out, lse
+
+
+def _flash(q, k, v, causal, q_offset, chunk):
+    return _flash_scan(q, k, v, causal, q_offset, chunk)[0]
+
+
+def _flash_fwd(q, k, v, causal, q_offset, chunk):
+    out, lse = _flash_scan(q, k, v, causal, q_offset, chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, q_offset, chunk, res, dout):
+    """FlashAttention-2 style backward: recompute scores per KV chunk, never
+    materializing the [Sq, Sk] matrix.  O(Sq*chunk) live memory."""
+    q, k, v, out, lse = res
+    B, Sq, Hq, hd = q.shape
+    Sk, Hkv, dv = k.shape[1], k.shape[2], v.shape[-1]
+    rep = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    n_chunks = -(-Sk // chunk)
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, Hkv, dv).transpose(1, 0, 2, 3, 4)
+    q_pos = q_offset + jnp.arange(Sq)
+    do_r = dout.reshape(B, Sq, Hkv, rep, dv)
+    # D = rowsum(dout * out)  [B,Hkv,rep,Sq]
+    D = jnp.einsum("bqhrd,bqhrd->bhrq", do_r.astype(jnp.float32),
+                   out.reshape(B, Sq, Hkv, rep, dv).astype(jnp.float32))
+
+    def step(dq_acc, inp):
+        ci, (kb, vb) = inp
+        s = _gqa_scores(q, kb)  # f32, already scaled
+        mask = _chunk_mask(ci, chunk, Sk, q_pos, causal)
+        s = jnp.where(mask[None, None, None] if causal
+                      else mask[None, None, None, None], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])  # [B,Hkv,rep,Sq,C]
+        dv_c = jnp.einsum("bhrqk,bqhrd->bkhd", p,
+                          do_r.astype(jnp.float32))
+        dp = jnp.einsum("bqhrd,bkhd->bhrqk", do_r.astype(jnp.float32),
+                        vb.astype(jnp.float32))
+        ds = p * (dp - D[..., None]) * scale  # grad wrt raw q.k
+        dq_c = jnp.einsum("bhrqk,bkhd->bqhrd", ds, kb.astype(jnp.float32))
+        dk_c = jnp.einsum("bhrqk,bqhrd->bkhd", ds,
+                          q.reshape(B, Sq, Hkv, rep, hd).astype(jnp.float32))
+        return dq_acc + dq_c, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((B, Sq, Hkv, rep, hd), jnp.float32)
+    dq, (dk_s, dv_s) = jax.lax.scan(step, dq0,
+                                    (jnp.arange(n_chunks), (kc, vc)),
+                                    unroll=scan_unroll_len(n_chunks))
+    dq = dq.reshape(B, Sq, Hq, hd).astype(q.dtype)
+    dk = dk_s.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * chunk, Hkv, hd)
+    dvv = dv_s.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * chunk, Hkv, dv)
+    if pad:
+        dk, dvv = dk[:, :Sk], dvv[:, :Sk]
+    return dq, dk.astype(k.dtype), dvv.astype(v.dtype)
+
+
+_flash_vjp = jax.custom_vjp(_flash, nondiff_argnums=(3, 4, 5))
+_flash_vjp.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool, q_offset: int = 0,
+                    chunk: int = FLASH_CHUNK) -> jnp.ndarray:
+    """Memory-bounded attention: online-softmax forward + FA2 backward.
+
+    Live memory is O(Sq * chunk) per head in both passes instead of
+    O(Sq * Sk); the backward recomputes probabilities per chunk from the
+    saved (q, k, v, out, lse) instead of storing them."""
+    return _flash_vjp(q, k, v, causal, q_offset, chunk)
+
+
+SWA_QTILE = 256
+
+
+def swa_attention_blocked(q, k, v, window: int) -> jnp.ndarray:
+    """Causal sliding-window prefill: scan over query tiles.
+
+    Each T_q-sized query tile attends to keys in [tile_start - W,
+    tile_end): FLOPs are O(S * (W + T_q)) instead of O(S^2), and live
+    memory is one [B, H, T_q, W+T_q] score tile (§Perf iter H3 — the
+    all-blocks-at-once version held ~13 GB/chip of fp32 scores when heads
+    can't shard, e.g. hymba's 25 heads)."""
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    W = window
+    Tq = min(SWA_QTILE, S)
+    nt = -(-S // Tq)
+    pad = nt * Tq - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = nt * Tq
+    rep = Hq // Hkv
+    # pad W zeros in front so every tile's key window is a static slice
+    kp = jnp.pad(k, ((0, 0), (W, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (W, 0), (0, 0), (0, 0)))
+    qt = q.reshape(B, nt, Tq, Hq, hd).transpose(1, 0, 2, 3, 4)
+    scale = 1.0 / math.sqrt(hd)
+
+    def tile(carry, inp):
+        t, qb = inp  # qb [B, Tq, Hq, hd]
+        kw = jax.lax.dynamic_slice_in_dim(kp, t * Tq, W + Tq, axis=1)
+        vw = jax.lax.dynamic_slice_in_dim(vp, t * Tq, W + Tq, axis=1)
+        qr = qb.reshape(B, Tq, Hkv, rep, hd)
+        s = jnp.einsum("bqhrd,bkhd->bhrqk", qr, kw).astype(jnp.float32) * scale
+        q_pos = t * Tq + jnp.arange(Tq)[:, None]  # absolute positions
+        k_pos = t * Tq - W + jnp.arange(W + Tq)[None, :]
+        allow = ((k_pos <= q_pos) & (q_pos - k_pos < W) & (k_pos >= 0)
+                 & (q_pos < S))
+        s = jnp.where(allow[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        ob = jnp.einsum("bhrqk,bkhd->bqhrd", p.astype(vw.dtype), vw)
+        return carry, ob.reshape(B, Tq, Hq, hd)
+
+    _, outs = jax.lax.scan(tile, 0, (jnp.arange(nt), qt),
+                           unroll=scan_unroll_len(nt))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, Sp, Hq, hd)
+    return out[:, :S]
+
+
+# ======================================================================
+# Full attention layer (projections + rope + cache handling)
+# ======================================================================
+def attention_layer(
+    p: dict,
+    cfg: ModelConfig,
+    x: jnp.ndarray,  # [B, S, D]
+    positions: jnp.ndarray,  # [B, S]
+    *,
+    layer_window: int = 0,  # 0 = global; >0 = sliding window
+    cache: Optional[KVCache] = None,  # decode/prefill cache
+    mode: str = "train",  # train | prefill | decode
+    cross_kv: Optional[tuple] = None,  # (k, v) for cross-attention
+    causal: bool = True,
+) -> tuple[jnp.ndarray, Optional[KVCache]]:
+    if cfg.use_mla:
+        return _mla_layer(p, cfg, x, positions, cache=cache, mode=mode)
+    B, S, D = x.shape
+    hd = cfg.head_dim
+    if cross_kv is None:
+        q = (x @ p["w_q"]).reshape(B, S, cfg.num_heads, hd)
+        k = (x @ p["w_k"]).reshape(B, S, cfg.num_kv_heads, hd)
+        v = (x @ p["w_v"]).reshape(B, S, cfg.num_kv_heads, hd)
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+        q = apply_rope(q, positions, fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+        k = apply_rope(k, positions, fraction=cfg.rope_fraction, theta=cfg.rope_theta)
+    else:
+        q = (x @ p["w_q"]).reshape(B, S, cfg.num_heads, hd)
+        k, v = cross_kv
+        causal = False
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and cross_kv is None
+        if layer_window and cache.k.shape[1] <= layer_window:
+            # ring-buffer window cache
+            w = cache.k.shape[1]
+            idx = cache.pos % w
+            kc = jax.lax.dynamic_update_slice(cache.k, k, (0, idx, 0, 0))
+            vc = jax.lax.dynamic_update_slice(cache.v, v, (0, idx, 0, 0))
+            valid_len = jnp.minimum(cache.pos + S, w)
+            kv_pos = jnp.arange(w)
+            mask = (kv_pos[None, None, None, None, :] <
+                    valid_len)  # ring: all valid slots attendable
+        else:
+            kc = jax.lax.dynamic_update_slice(cache.k, k, (0, cache.pos, 0, 0))
+            vc = jax.lax.dynamic_update_slice(cache.v, v, (0, cache.pos, 0, 0))
+            kv_pos = jnp.arange(kc.shape[1])
+            mask = kv_pos[None, None, None, None, :] < (cache.pos + S)
+            if layer_window:
+                mask = mask & (kv_pos[None, None, None, None, :]
+                               >= cache.pos + S - layer_window)
+        new_cache = KVCache(kc, vc, cache.pos + S)
+        out = dense_attention(q, kc, vc, mask)
+    elif mode == "prefill" and cross_kv is None:
+        # fill the cache, then compute attention over the fresh K/V
+        if cache is not None:
+            w = cache.k.shape[1]
+            if w >= S:
+                kc = jax.lax.dynamic_update_slice(cache.k, k, (0, 0, 0, 0))
+                vc = jax.lax.dynamic_update_slice(cache.v, v, (0, 0, 0, 0))
+            else:  # window cache smaller than prompt: keep tail, ring-aligned
+                kc = jax.lax.dynamic_slice_in_dim(k, S - w, w, axis=1)
+                vc = jax.lax.dynamic_slice_in_dim(v, S - w, w, axis=1)
+                kc = jnp.roll(kc, (S - w) % w, axis=1)
+                vc = jnp.roll(vc, (S - w) % w, axis=1)
+            new_cache = KVCache(kc, vc, jnp.asarray(S, jnp.int32))
+        out = _prefill_attention(q, k, v, layer_window, S)
+    else:  # train (or encoder / cross-attention)
+        if not causal:
+            Sk = k.shape[1]
+            mask = jnp.ones((1, 1, 1, S, Sk), bool)
+            out = dense_attention(q, k, v, mask)
+        else:
+            out = _prefill_attention(q, k, v, layer_window, S)
+
+    out = out.reshape(B, S, cfg.num_heads * hd)
+    return out @ p["w_o"], new_cache
+
+
+def _prefill_attention(q, k, v, layer_window: int, S: int) -> jnp.ndarray:
+    if layer_window and S > layer_window:
+        return swa_attention_blocked(q, k, v, layer_window)
+    if S > FLASH_THRESHOLD:
+        return flash_attention(q, k, v, causal=True)
+    pos = jnp.arange(S)
+    mask = (pos[None, :] <= pos[:, None])[None, None, None]
+    if layer_window:
+        mask = mask & (pos[:, None] - pos[None, :] < layer_window)[None, None, None]
+    return dense_attention(q, k, v, mask)
+
+
+# ======================================================================
+# MLA (deepseek-v3)
+# ======================================================================
+def _mla_qkv(p, cfg, x, positions):
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = rms_norm(x @ p["q_down"], p["q_down_norm"], cfg.norm_eps)
+    q = (cq @ p["q_up"]).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, theta=cfg.rope_theta)
+    ckv_full = x @ p["kv_down"]  # [B,S,kv_lora+dr]
+    c_kv = rms_norm(ckv_full[..., : cfg.kv_lora_rank], p["kv_down_norm"], cfg.norm_eps)
+    k_rope = apply_rope(ckv_full[..., cfg.kv_lora_rank:][:, :, None, :],
+                        positions, theta=cfg.rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_layer(p, cfg, x, positions, *, cache, mode):
+    B, S, D = x.shape
+    H, dn, dr, dv = cfg.num_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    if mode == "decode":
+        assert cache is not None
+        packed = jnp.concatenate([c_kv, k_rope], axis=-1).astype(cache.k.dtype)
+        ck = jax.lax.dynamic_update_slice(cache.k, packed, (0, cache.pos, 0))
+        new_cache = KVCache(ck, None, cache.pos + S)
+        ckv_all, kr_all = ck[..., :r], ck[..., r:]
+        # absorbed path: q' = q_nope @ k_up^T  -> [B,S,H,r]
+        k_up = p["k_up"].reshape(r, H, dn)
+        q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, k_up)
+        s = (jnp.einsum("bshr,btr->bhst", q_abs.astype(jnp.float32),
+                        ckv_all.astype(jnp.float32))
+             + jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32),
+                          kr_all.astype(jnp.float32))) * scale
+        kv_pos = jnp.arange(ck.shape[1])
+        mask = kv_pos[None, None, None, :] < (cache.pos + S)
+        s = jnp.where(mask, s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        # attention output in compressed space, then up-project through v_up
+        ctx = jnp.einsum("bhst,btr->bshr", pr, ckv_all.astype(jnp.float32))
+        v_up = p["v_up"].reshape(r, H, dv)
+        out = jnp.einsum("bshr,rhd->bshd", ctx, v_up.astype(jnp.float32))
+        out = out.reshape(B, S, H * dv).astype(x.dtype)
+        return out @ p["w_o"], new_cache
+
+    # train / prefill: materialize per-head K/V from the compressed stream
+    k_nope = (c_kv @ p["k_up"]).reshape(B, S, H, dn)
+    v = (c_kv @ p["v_up"]).reshape(B, S, H, dv)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                                  (B, S, H, dr))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    new_cache = None
+    if mode == "prefill" and cache is not None:
+        packed = jnp.concatenate([c_kv, k_rope], axis=-1).astype(cache.k.dtype)
+        ck = jax.lax.dynamic_update_slice(cache.k, packed, (0, 0, 0))
+        new_cache = KVCache(ck, None, jnp.asarray(S, jnp.int32))
+    if S > FLASH_THRESHOLD:
+        out = flash_attention(q, k, v, causal=True)
+    else:
+        pos = jnp.arange(S)
+        mask = (pos[None, :] <= pos[:, None])[None, None, None]
+        out = dense_attention(q, k, v, mask)
+    out = out.reshape(B, S, H * dv)
+    return out @ p["w_o"], new_cache

@@ -1,0 +1,21 @@
+"""Runtime flags.
+
+REPRO_UNROLL_SCANS=1 unrolls every structural lax.scan (layer stacks, flash
+attention chunks, loss chunks, SSD inter-chunk recurrence).  The dry-run sets
+this because XLA's ``cost_analysis`` counts a while-loop body ONCE rather than
+times its trip count — unrolling is what makes the roofline FLOP/byte/
+collective numbers exact.  Execution paths (tests, examples) keep scans rolled
+for compile-time and memory reasons.
+"""
+from __future__ import annotations
+
+import os
+
+
+def unroll_scans() -> bool:
+    return os.environ.get("REPRO_UNROLL_SCANS", "0") == "1"
+
+
+def scan_unroll_len(length: int) -> int:
+    """Value for lax.scan's ``unroll=`` kwarg."""
+    return length if unroll_scans() else 1

@@ -1,0 +1,190 @@
+"""Shared layer primitives (pure functional JAX, no framework dependency).
+
+Parameters are built as trees of :class:`Param` — (value, logical_axes) —
+and split into a plain value tree plus a parallel logical-spec tree used by
+the sharding resolver.  Everything works identically under ``jax.eval_shape``
+so the dry-run can derive full-size parameter shardings without allocating.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.flags import scan_unroll_len
+
+PARAM_DTYPE = jnp.bfloat16
+
+
+class Param(NamedTuple):
+    value: Any  # jnp array (or ShapeDtypeStruct under eval_shape)
+    axes: tuple  # logical axis names, one per dim (None = replicated)
+
+
+def mk(key: jax.Array, shape: Sequence[int], axes: Sequence[Optional[str]],
+       scale: Optional[float] = None, dtype=PARAM_DTYPE) -> Param:
+    if scale is None:
+        scale = 1.0 / math.sqrt(shape[0]) if len(shape) > 1 else 1.0
+    if len(shape) == 0 or scale == 0.0:
+        v = jnp.zeros(shape, dtype)
+    else:
+        v = (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+    return Param(v, tuple(axes))
+
+
+def ones_param(shape, axes, dtype=jnp.float32) -> Param:
+    return Param(jnp.ones(shape, dtype), tuple(axes))
+
+
+def zeros_param(shape, axes, dtype=PARAM_DTYPE) -> Param:
+    return Param(jnp.zeros(shape, dtype), tuple(axes))
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_params(tree):
+    """Param tree -> (value tree, logical-axes tree)."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+def stack_params(trees: list):
+    """Stack per-layer Param trees along a new leading 'layers' dim."""
+    def _stack(*ps):
+        vals = jnp.stack([p.value for p in ps])
+        return Param(vals, (None,) + ps[0].axes)
+    return jax.tree.map(_stack, *trees, is_leaf=is_param)
+
+
+# ----------------------------------------------------------------------
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ----------------------------------------------------------------------
+# RoPE with partial-rotation support (chatglm/glm "2d" RoPE rotates half).
+def rope_freqs(head_dim: int, fraction: float, theta: float) -> jnp.ndarray:
+    rot = int(head_dim * fraction)
+    rot -= rot % 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, *, fraction: float = 1.0,
+               theta: float = 10000.0) -> jnp.ndarray:
+    """x: [B, S, H, hd]; positions: [B, S] (int)."""
+    if theta <= 0:
+        return x  # absolute-position archs (whisper)
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, fraction, theta)  # [rot/2]
+    rot = inv.shape[0] * 2
+    ang = positions[..., None].astype(jnp.float32) * inv  # [B,S,rot/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    o1 = (x1.astype(jnp.float32) * cos - x2.astype(jnp.float32) * sin)
+    o2 = (x1.astype(jnp.float32) * sin + x2.astype(jnp.float32) * cos)
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1) if rot < hd else out
+
+
+def sinusoidal_positions(num_pos: int, dim: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal absolute embeddings [num_pos, dim]."""
+    inv = jnp.exp(-math.log(10000.0) * jnp.arange(dim // 2, dtype=jnp.float32)
+                  / max(dim // 2 - 1, 1))
+    ang = jnp.arange(num_pos, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ----------------------------------------------------------------------
+def init_mlp(key: jax.Array, d_model: int, d_ff: int, gated: bool) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"w_in": mk(ks[0], (d_model, d_ff), ("fsdp", "mlp")),
+         "w_out": mk(ks[1], (d_ff, d_model), ("mlp", "fsdp"))}
+    if gated:
+        p["w_gate"] = mk(ks[2], (d_model, d_ff), ("fsdp", "mlp"))
+    return p
+
+
+def apply_mlp(p: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    h = x @ p["w_in"]
+    if "w_gate" in p:
+        h = act_fn(act)(x @ p["w_gate"]) * h
+    else:
+        h = act_fn(act)(h)
+    return h @ p["w_out"]
+
+
+def init_norm(shape_d: int) -> Param:
+    return ones_param((shape_d,), (None,))
+
+
+def init_embedding(key: jax.Array, vocab: int, d_model: int) -> Param:
+    return mk(key, (vocab, d_model), ("vocab", "fsdp"), scale=0.02)
+
+
+def chunked_softmax_xent(hidden: jnp.ndarray, head: jnp.ndarray,
+                         labels: jnp.ndarray, *, chunk: int = 512,
+                         z_loss: float = 1e-4) -> jnp.ndarray:
+    """Cross-entropy without materializing full [B,S,V] fp32 logits.
+
+    Scans over sequence chunks; each chunk's logits are computed, reduced,
+    and (thanks to the rematerialized body) recomputed in the backward pass —
+    live logits memory drops from O(S*V) to O(chunk*V).  This is the standard
+    fused-loss trick for 150k-vocab models."""
+    from repro.dist.sharding import shard  # local import (cycle)
+
+    B, S, D = hidden.shape
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    nc = S // c
+    hs = hidden.reshape(B, nc, c, D).transpose(1, 0, 2, 3)
+    ys = labels.reshape(B, nc, c).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        h_c, y_c = xs
+        # Megatron-SP loss: tokens sharded over (data x model) so the vocab
+        # matmul is never replicated across the model axis (a 16x flop/byte
+        # win measured in the dry-run probes — EXPERIMENTS.md §Perf).
+        h_c = shard(h_c, "batch", "seq", None, tag="loss_chunk")
+        y_c = shard(y_c, "batch", "seq", tag="loss_labels")
+        logits = (h_c @ head).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, y_c[..., None], axis=-1)[..., 0]
+        nll = lse - ll
+        if z_loss:
+            nll = nll + z_loss * lse ** 2
+        return carry + jnp.sum(nll), None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ys),
+                            unroll=scan_unroll_len(nc))
+    return total / (B * S)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None,
+                  z_loss: float = 1e-4) -> jnp.ndarray:
+    """Mean token NLL (fp32) + z-loss. logits [..., V]; labels [...] int."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if z_loss:
+        nll = nll + z_loss * lse ** 2
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

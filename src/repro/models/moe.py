@@ -1,0 +1,150 @@
+"""Mixture-of-Experts with capacity-bucketed sort-based dispatch.
+
+The dispatch is deliberately the same pattern as the ASYMP engine's
+message routing (core/engine.py): (token, expert) pairs are bucketed into a
+fixed-capacity [E, C] buffer — overflow drops (graph engine: overflow
+retries) — then a batched per-expert GEMM runs fully local under expert
+parallelism, and results scatter-add back to tokens.  Gathers/scatters cost
+bytes, not FLOPs, so `cost_analysis` reflects true active-parameter compute
+(6·N_active·D), unlike the dense one-hot GShard dispatch.
+
+Expert weights are sharded [experts -> model]; token buffers carry a
+with_sharding_constraint so GSPMD materializes the token all-to-all between
+the data-sharded and expert-sharded layouts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import shard
+from repro.models.layers import act_fn, mk
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": mk(ks[0], (d, e), (None, None), scale=0.02),  # replicated
+        "w_in": mk(ks[1], (e, d, f), ("experts", "fsdp", None)),
+        "w_gate": mk(ks[2], (e, d, f), ("experts", "fsdp", None)),
+        "w_out": mk(ks[3], (e, f, d), ("experts", "fsdp", None)),
+    }
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        p["shared_w_in"] = mk(ks[4], (d, fs), ("fsdp", "mlp"))
+        p["shared_w_gate"] = mk(ks[5], (d, fs), ("fsdp", "mlp"))
+        p["shared_w_out"] = mk(ks[4], (fs, d), ("mlp", "fsdp"))
+    return p
+
+
+def _pair_ranks(sel, E: int):
+    """sel [T,k] -> (rank [T,k]) position of each (token, slot) pair within
+    its expert's bucket.  Index-only computation (one argsort of T*k int32) —
+    no [T*k, D] tensor is ever materialized."""
+    T, k = sel.shape
+    pair_expert = sel.reshape(-1)
+    order = jnp.argsort(pair_expert)  # stable
+    se = pair_expert[order]
+    starts = jnp.searchsorted(se, jnp.arange(E))
+    rank_sorted = jnp.arange(T * k) - starts[se]
+    inv = jnp.zeros_like(order).at[order].set(jnp.arange(T * k))
+    return rank_sorted[inv].reshape(T, k)
+
+
+def _group_dispatch(xg, sel, rank, E: int, C: int):
+    """xg [T,D]; sel/rank [T,k] -> buf [E,C,D].
+
+    k scatters whose update operand is xg itself (no pair expansion);
+    rank >= C lands out of bounds -> dropped (ASYMP bounded queues)."""
+    T, D = xg.shape
+    k = sel.shape[-1]
+    buf = jnp.zeros((E, C, D), xg.dtype)
+    for j in range(k):
+        r = jnp.where(rank[:, j] < C, rank[:, j], C)
+        buf = buf.at[sel[:, j], r].set(xg, mode="drop")
+    return buf
+
+
+def _group_combine(out_e, sel, rank, gate, T: int, C: int):
+    """out_e [E,C,D] -> y [T,D]: k gathers of [T,D], fp32 accumulation."""
+    D = out_e.shape[-1]
+    y = jnp.zeros((T, D), jnp.float32)
+    for j in range(sel.shape[-1]):
+        keep = rank[:, j] < C
+        vals = out_e[sel[:, j], jnp.minimum(rank[:, j], C - 1)]
+        y = y + jnp.where(keep[:, None],
+                          vals.astype(jnp.float32) * gate[:, j, None], 0.0)
+    return y
+
+
+def apply_moe(p: dict, cfg: ModelConfig, x: jnp.ndarray
+              ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x [B, S, D] -> (out [B, S, D], aux_loss scalar).
+
+    GShard-style grouped dispatch: tokens are bucketed *within* groups (the
+    batch dim for train/prefill; one global group for decode), so every
+    sort/scatter/gather is a batched op over a data-sharded group axis and
+    the only cross-shard movement is the token exchange between the
+    group-sharded and expert-sharded layouts (the MoE all-to-all)."""
+    B, S, D = x.shape
+    T = B * S
+    E, k = cfg.num_experts, cfg.experts_per_token
+
+    # group selection: batch rows for train/prefill; single group for decode
+    if S > 1:
+        G, Tg = B, S
+    else:
+        G, Tg = 1, T
+    # groups shard over data; tokens within a group stay local so the
+    # dispatch gathers/scatters never cross shards (SPMD would otherwise
+    # rewrite them into massive masked selects)
+    xg = x.reshape(G, Tg, D)
+    xg = shard(xg, "batch", None, None, tag="moe_groups")
+
+    logits = (xg @ p["router"]).astype(jnp.float32)  # [G, Tg, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, sel = jax.lax.top_k(probs, k)  # [G, Tg, k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balance aux loss (switch-style, global) ----
+    # density via scatter-add (a one_hot of [G,Tg,k,E] would be terabytes)
+    density = jnp.zeros((E,), jnp.float32).at[sel.reshape(-1)].add(1.0
+                                                                   ) / (T * k)
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = cfg.router_aux_coef * E * jnp.sum(density * mean_prob) * k
+
+    # ---- dispatch/compute/combine ----
+    from repro.dist.sharding import current_mesh
+    mesh = current_mesh()
+    tp = mesh.shape.get("model", 1) if mesh is not None else 1
+    if mesh is not None and tp > 1 and E % tp == 0:
+        # production path: explicit shard_map all-to-all (ASYMP routing)
+        from repro.models.moe_a2a import apply_moe_a2a
+        y = apply_moe_a2a(p, cfg, x, gate.reshape(B, S, k).astype(jnp.float32),
+                          sel.reshape(B, S, k).astype(jnp.int32))
+        y = y.reshape(G, Tg, D).astype(jnp.float32)
+    else:
+        # single-device / indivisible fallback: grouped local dispatch
+        C = max(int(cfg.capacity_factor * Tg * k / E), 1)
+        rank = jax.vmap(lambda s_: _pair_ranks(s_, E))(sel)  # [G, Tg, k]
+        buf = jax.vmap(lambda xg_, s_, r_: _group_dispatch(xg_, s_, r_, E, C)
+                       )(xg, sel, rank)
+        buf = shard(buf, "batch", "experts", None, None, tag="moe_dispatch")
+        h = jnp.einsum("gecd,edf->gecf", buf, p["w_in"])
+        g = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"])
+        h = act_fn(cfg.act)(g) * h
+        out_e = jnp.einsum("gecf,efd->gecd", h, p["w_out"])
+        out_e = shard(out_e, "batch", "experts", None, None, tag="moe_out")
+        y = jax.vmap(lambda o_, s_, r_, g_: _group_combine(o_, s_, r_, g_, Tg, C)
+                     )(out_e, sel, rank, gate)
+    y = shard(y, "batch", None, None, tag="moe_combine")
+
+    if cfg.num_shared_experts:
+        xt = x.reshape(T, D)
+        hs = xt @ p["shared_w_in"]
+        gs = act_fn(cfg.act)(xt @ p["shared_w_gate"])
+        y = y.reshape(T, D) + ((gs * hs) @ p["shared_w_out"]).astype(jnp.float32)
+
+    return y.reshape(B, S, D).astype(x.dtype), aux

@@ -1,0 +1,278 @@
+"""Mamba2 — SSD (state-space duality) layer, chunked train path + O(1) decode.
+
+Faithful minimal SSD per arXiv:2405.21060 §6 (chunkwise block decomposition):
+diagonal blocks are attention-like within a chunk; low-rank off-diagonal
+blocks flow through a per-chunk recurrent state of size [H, N, P].  Decode is
+a single recurrent update on that state (constant memory — this is why
+mamba2/hymba run the `long_500k` cell).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.flags import scan_unroll_len
+from repro.models.layers import Param, mk
+
+
+class SSMCache(NamedTuple):
+    state: jnp.ndarray  # [B, H, N, P] fp32
+    conv: jnp.ndarray  # [B, W-1, conv_channels]
+
+
+def conv_channels(cfg: ModelConfig) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_state  # x, B, C streams
+
+
+def init_ssm(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 4)
+    cc = conv_channels(cfg)
+    return {
+        # order: [z (di), x (di), B (n), C (n), dt (h)]
+        "in_proj": mk(ks[0], (d, 2 * di + 2 * n + h), ("fsdp", "ssm_inner")),
+        "conv_w": mk(ks[1], (cfg.ssm_conv_width, cc), (None, "ssm_inner"), scale=0.5),
+        "conv_b": Param(jnp.zeros((cc,), jnp.float32), ("ssm_inner",)),
+        "a_log": Param(jnp.zeros((h,), jnp.float32), ("ssm_heads",)),
+        "dt_bias": Param(jnp.zeros((h,), jnp.float32), ("ssm_heads",)),
+        "d_skip": Param(jnp.ones((h,), jnp.float32), ("ssm_heads",)),
+        "out_norm": Param(jnp.ones((di,), jnp.float32), ("ssm_inner",)),
+        "out_proj": mk(ks[2], (di, d), ("ssm_inner", "fsdp")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 prev: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv. xbc [B,S,C]; w [W,C]; prev [B,W-1,C] or zeros."""
+    W = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[2]), xbc.dtype)
+    xp = jnp.concatenate([prev, xbc], axis=1)
+    out = sum(xp[:, i: i + xbc.shape[1]] * w[i] for i in range(W))
+    return jax.nn.silu(out + b.astype(out.dtype))
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """x [..., L] -> [..., L, L] lower-triangular pairwise cumulative sums."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum over (j, i]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a, B, C, chunk: int, s0=None, states_only: bool = False):
+    """SSD scan. x [b,S,H,P]; dt [b,S,H] (>0); a [H] (<0); B,C [b,S,N].
+
+    s0: optional initial state [b,H,N,P] (sequence-parallel shards chain
+    through it).  states_only skips the (expensive) diagonal blocks and
+    returns (None, s_final) — used for the shard-summary pass.
+    Returns y [b,S,H,P] and final state [b,H,N,P]."""
+    b, S, H, P = x.shape
+    N = B.shape[-1]
+    Q = chunk
+    nc = S // Q
+    assert S % Q == 0, (S, Q)
+    xr = x.reshape(b, nc, Q, H, P)
+    dtr = dt.reshape(b, nc, Q, H)
+    Br = B.reshape(b, nc, Q, N)
+    Cr = C.reshape(b, nc, Q, N)
+    da = dtr * a  # [b,nc,Q,H] negative
+    da_cum = jnp.cumsum(da, axis=2)  # within-chunk
+    da_total = da_cum[:, :, -1]  # [b,nc,H]
+    xdt = xr * dtr[..., None]  # [b,nc,Q,H,P]
+
+    if not states_only:
+        # 1) diagonal: y_ij = C_i·B_j * exp(da_cum_i - da_cum_j) * dt_j x_j
+        Lmat = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))  # [b,nc,H,Q,Q]
+        scores = jnp.einsum("bcin,bcjn->bcij", Cr, Br)  # shared across heads
+        sx = scores[:, :, None] * Lmat  # [b,nc,H,Q,Q]
+        y_diag = jnp.einsum("bchij,bcjhp->bcihp", sx.astype(x.dtype), xdt)
+
+    # 2) per-chunk states: S_c = sum_j B_j ⊗ (dt_j x_j) * exp(da_total - da_cum_j)
+    decay_to_end = jnp.exp(da_total[:, :, None] - da_cum)  # [b,nc,Q,H]
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp",
+                        Br.astype(jnp.float32), decay_to_end.astype(jnp.float32),
+                        xdt.astype(jnp.float32))
+    if states_only:
+        # only the final state is needed: combine chunk states directly
+        s_run = s0 if s0 is not None else jnp.zeros((b, H, N, P), jnp.float32)
+        for c in range(nc):
+            s_run = (s_run * jnp.exp(da_total[:, c])[..., None, None]
+                     + states[:, c])
+        return None, s_run
+
+    # 3) inter-chunk recurrence over nc (fp32 carry)
+    def step(carry, inp):
+        s_prev = carry
+        s_c, decay_c = inp  # [b,H,N,P], [b,H]
+        s_new = s_prev * jnp.exp(decay_c)[..., None, None] + s_c
+        return s_new, s_prev
+
+    if s0 is None:
+        s0 = jnp.zeros((b, H, N, P), jnp.float32)
+    s_final, s_prevs = jax.lax.scan(
+        step, s0, (states.transpose(1, 0, 2, 3, 4),
+                   da_total.transpose(1, 0, 2)), unroll=scan_unroll_len(nc))
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)  # [b,nc,H,N,P] state entering chunk
+
+    # 4) off-diagonal contribution: y_i += C_i · s_prev * exp(da_cum_i)
+    y_off = jnp.einsum("bcin,bcih,bchnp->bcihp",
+                       Cr.astype(jnp.float32), jnp.exp(da_cum).astype(jnp.float32),
+                       s_prevs)
+    y = (y_diag.astype(jnp.float32) + y_off).reshape(b, S, H, P)
+    return y.astype(x.dtype), s_final
+
+
+def _ssd_seq_parallel(xs, dt, a, Bv, Cv, chunk: int, tp: int):
+    """Sequence-parallel SSD (§Perf iter M2): runs inside shard_map with the
+    sequence axis sharded over `model`.
+
+    Each shard computes its local chunk states with s0=0, all-gathers the
+    tiny per-shard (final_state, decay_product) summaries [tp, b, H, ...],
+    combines them into its exclusive prefix state, and re-applies the local
+    scan seeded with that state.  Cross-shard traffic is O(tp * b*H*N*P)
+    instead of gathering the full sequence."""
+    axis = "model"
+    # summary pass: local final state with s0=0 (no diagonal blocks)
+    _, s_fin = ssd_chunked(xs, dt, a, Bv, Cv, chunk, states_only=True)
+    da_total_local = jnp.sum(dt * a, axis=1)  # [b,H] log-decay of the shard
+    dprod = jnp.exp(da_total_local)
+    # gather shard summaries
+    s_all = jax.lax.all_gather(s_fin, axis)  # [tp, b,H,N,P]
+    d_all = jax.lax.all_gather(dprod, axis)  # [tp, b,H]
+    idx = jax.lax.axis_index(axis)
+    # exclusive prefix: s0 = sum_{q<p} s_q * prod_{q<r<p} d_r
+    b, H = dprod.shape
+    s0 = jnp.zeros_like(s_fin)
+    for q in range(tp):
+        decay_qp = jnp.ones((b, H), jnp.float32)
+        for r in range(q + 1, tp):
+            decay_qp = decay_qp * jnp.where(r < idx, d_all[r], 1.0)
+        contrib = s_all[q] * decay_qp[..., None, None]
+        s0 = s0 + jnp.where(q < idx, 1.0, 0.0) * contrib
+    # correction pass seeded with the prefix state
+    y, _ = ssd_chunked(xs, dt, a, Bv, Cv, chunk, s0=s0)
+    return y
+
+
+def _ssd_seq_parallel_call(xs, dtp, a, Bv, Cv, chunk, mesh):
+    """shard_map wrapper: sequence axis over `model`, batch over data axes."""
+    from functools import partial
+
+    import jax
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    tp = mesh.shape["model"]
+    dp_axes = tuple(x for x in ("pod", "data") if x in mesh.shape)
+    dp_tot = 1
+    for ax in dp_axes:
+        dp_tot *= mesh.shape[ax]
+    bs = dp_axes if (dp_axes and xs.shape[0] % dp_tot == 0) else None
+    xspec = P(bs, "model", None, None)
+    vspec = P(bs, "model", None)
+    fn = partial(_ssd_seq_parallel, chunk=chunk, tp=tp)
+    return shard_map(
+        lambda x_, d_, a_, b_, c_: fn(x_, d_, a_, b_, c_),
+        mesh=mesh,
+        in_specs=(xspec, vspec, P(None), vspec, vspec),
+        out_specs=xspec, check_vma=False,
+    )(xs, dtp, a, Bv, Cv)
+
+
+def apply_ssm(p: dict, cfg: ModelConfig, u: jnp.ndarray,
+              cache: Optional[SSMCache] = None, mode: str = "train"
+              ) -> tuple[jnp.ndarray, Optional[SSMCache]]:
+    """u [B,S,D] -> y [B,S,D]. mode train/prefill use the chunked scan;
+    decode uses the O(1) recurrent update."""
+    Bsz, S, D = u.shape
+    di, n, h, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = u @ p["in_proj"]
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    a = -jnp.exp(p["a_log"])  # [h]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,h]
+
+    if mode == "decode":
+        assert cache is not None and S == 1
+        W = cfg.ssm_conv_width
+        conv_in = jnp.concatenate([cache.conv, xbc], axis=1)  # [B,W,cc]
+        xbc_c = jax.nn.silu(
+            jnp.sum(conv_in * p["conv_w"].astype(conv_in.dtype), axis=1)
+            + p["conv_b"].astype(conv_in.dtype))  # [B,cc]
+        new_conv = conv_in[:, 1:]
+        xs = xbc_c[..., :di].reshape(Bsz, h, P)
+        Bv = xbc_c[..., di: di + n]
+        Cv = xbc_c[..., di + n:]
+        dts = dt[:, 0]  # [B,h]
+        decay = jnp.exp(dts * a)  # [B,h]
+        upd = jnp.einsum("bn,bh,bhp->bhnp", Bv.astype(jnp.float32),
+                         dts, xs.astype(jnp.float32))
+        state = cache.state * decay[..., None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", Cv.astype(jnp.float32), state)
+        y = y + p["d_skip"][None, :, None] * xs.astype(jnp.float32)
+        y = y.reshape(Bsz, 1, di)
+        new_cache = SSMCache(state, new_conv)
+    else:
+        prev = cache.conv if cache is not None else None
+        xbc_c = _causal_conv(xbc, p["conv_w"].astype(xbc.dtype),
+                             p["conv_b"], prev)
+        xs = xbc_c[..., :di].reshape(Bsz, S, h, P)
+        Bv = xbc_c[..., di: di + n]
+        Cv = xbc_c[..., di + n:]
+        chunk = min(cfg.ssm_chunk, S)
+        pad = (-S) % chunk
+        if pad:
+            xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Bv = jnp.pad(Bv, ((0, 0), (0, pad), (0, 0)))
+            Cv = jnp.pad(Cv, ((0, 0), (0, pad), (0, 0)))
+            dtp = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        else:
+            dtp = dt
+        from repro.dist.sharding import current_mesh
+        mesh = current_mesh()
+        tp = mesh.shape.get("model", 1) if mesh is not None else 1
+        S_pad = xs.shape[1]
+        if (mode == "train" and mesh is not None and tp > 1
+                and S_pad % tp == 0 and (S_pad // tp) % chunk == 0):
+            # §Perf iter M2: sequence-parallel SSD — the inter-chunk
+            # recurrence otherwise forces GSPMD to gather the full sequence
+            y = _ssd_seq_parallel_call(xs, dtp, a, Bv, Cv, chunk, mesh)
+            s_final = None
+        else:
+            y, s_final = ssd_chunked(xs, dtp, a, Bv, Cv, chunk)
+        y = y[:, :S]
+        y = y + p["d_skip"][None, None, :, None] * xs[:, :S].astype(jnp.float32)
+        y = y.reshape(Bsz, S, di)
+        new_cache = None
+        if mode == "prefill":
+            W = cfg.ssm_conv_width
+            tail = xbc[:, -(W - 1):] if S >= W - 1 else jnp.pad(
+                xbc, ((0, 0), (W - 1 - S, 0), (0, 0)))
+            new_cache = SSMCache(s_final, tail)
+
+    # gated output norm (mamba2 uses RMSNorm(y * silu(z)))
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + cfg.norm_eps) * p["out_norm"]
+    return (y.astype(u.dtype) @ p["out_proj"]), new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int) -> SSMCache:
+    return SSMCache(
+        jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+                  jnp.float32),
+        jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_channels(cfg)),
+                  jnp.bfloat16),
+    )

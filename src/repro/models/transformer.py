@@ -1,0 +1,345 @@
+"""Decoder-LM assembly: plan-driven stacks covering all assigned families.
+
+A :class:`ModelPlan` (static, derived from the config) describes the layer
+stacks: homogeneous stacks of >= MIN_SCAN layers run under ``lax.scan`` with
+stacked parameters (bounded HLO size — essential for 61-layer models on the
+512-chip dry-run); heterogeneous stacks (hymba's per-layer global/SWA mix)
+unroll.  deepseek-v3 becomes two stacks (3 dense + 58 MoE) plus an MTP head.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import shard
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.flags import scan_unroll_len, unroll_scans
+from repro.models.layers import (Param, apply_mlp, chunked_softmax_xent,
+                                 cross_entropy, init_embedding, init_mlp,
+                                 init_norm, mk, rms_norm, split_params,
+                                 stack_params)
+
+MIN_SCAN = 8
+
+
+# ======================================================================
+# Plan
+# ======================================================================
+@dataclass(frozen=True)
+class StackPlan:
+    kind: str  # dense | moe | ssm | hybrid
+    n: int
+    windows: tuple  # per-layer sliding window (0 = global); len == n
+    scan: bool
+    d_ff: int
+
+
+@dataclass(frozen=True)
+class ModelPlan:
+    stacks: tuple
+
+
+def _use_scan(n: int) -> bool:
+    return n >= MIN_SCAN and not unroll_scans()
+
+
+def build_plan(cfg: ModelConfig) -> ModelPlan:
+    L = cfg.num_layers
+    if cfg.family == "ssm":
+        return ModelPlan((StackPlan("ssm", L, (0,) * L, _use_scan(L), 0),))
+    if cfg.family == "hybrid":
+        # global attention on first / middle / last layer, SWA elsewhere
+        glob = {0, L // 2, L - 1}
+        wins = tuple(0 if i in glob else cfg.sliding_window for i in range(L))
+        return ModelPlan((StackPlan("hybrid", L, wins, False, cfg.d_ff),))
+    if cfg.is_moe:
+        stacks = []
+        if cfg.first_k_dense:
+            k = cfg.first_k_dense
+            stacks.append(StackPlan("dense", k, (0,) * k, False,
+                                    cfg.dense_d_ff or cfg.d_ff))
+        m = L - cfg.first_k_dense
+        stacks.append(StackPlan("moe", m, (0,) * m, _use_scan(m), cfg.d_ff))
+        return ModelPlan(tuple(stacks))
+    wins = (cfg.sliding_window,) * L if cfg.attn_type == "swa" else (0,) * L
+    return ModelPlan((StackPlan("dense", L, wins, _use_scan(L), cfg.d_ff),))
+
+
+# ======================================================================
+# Per-layer cache container
+# ======================================================================
+class LayerCache(NamedTuple):
+    kv: Any  # KVCache | None
+    ssm: Any  # SSMCache | None
+
+
+def init_layer_cache(cfg: ModelConfig, kind: str, batch: int, s_max: int,
+                     window: int) -> LayerCache:
+    kv = s = None
+    if kind in ("dense", "moe", "hybrid"):
+        kv = attn_mod.init_kv_cache(cfg, batch, s_max, window)
+    if kind in ("ssm", "hybrid"):
+        s = ssm_mod.init_ssm_cache(cfg, batch)
+    return LayerCache(kv, s)
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int):
+    """Full-model cache: one entry per stack (stacked for scan stacks)."""
+    plan = build_plan(cfg)
+    caches = []
+    for sp in plan.stacks:
+        if sp.scan:
+            per = init_layer_cache(cfg, sp.kind, batch, s_max, sp.windows[0])
+            caches.append(jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (sp.n,) + x.shape), per))
+        else:
+            caches.append(tuple(
+                init_layer_cache(cfg, sp.kind, batch, s_max, w)
+                for w in sp.windows))
+    return tuple(caches)
+
+
+def _layer_cache_axes(cfg: ModelConfig, kind: str, stacked: bool) -> LayerCache:
+    """Logical-axes tree mirroring init_layer_cache's structure."""
+    pre = (None,) if stacked else ()
+    kv = s = None
+    if kind in ("dense", "moe", "hybrid"):
+        if cfg.use_mla:
+            kv = attn_mod.KVCache(pre + ("batch", "kv_seq", None), None,
+                                  pre + ())
+        else:
+            kv = attn_mod.KVCache(pre + ("batch", "kv_seq", "kv_heads", None),
+                                  pre + ("batch", "kv_seq", "kv_heads", None),
+                                  pre + ())
+    if kind in ("ssm", "hybrid"):
+        s = ssm_mod.SSMCache(pre + ("batch", "ssm_heads", None, None),
+                             pre + ("batch", None, "ssm_inner"))
+    return LayerCache(kv, s)
+
+
+def cache_axes(cfg: ModelConfig):
+    """Logical axes for the init_cache pytree (for the sharding resolver)."""
+    plan = build_plan(cfg)
+    out = []
+    for sp in plan.stacks:
+        if sp.scan:
+            out.append(_layer_cache_axes(cfg, sp.kind, True))
+        else:
+            out.append(tuple(_layer_cache_axes(cfg, sp.kind, False)
+                             for _ in range(sp.n)))
+    return tuple(out)
+
+
+# ======================================================================
+# Blocks
+# ======================================================================
+def init_block(key: jax.Array, cfg: ModelConfig, kind: str, d_ff: int) -> dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: dict = {"norm1": init_norm(d)}
+    if kind == "ssm":
+        p["ssm"] = ssm_mod.init_ssm(ks[0], cfg)
+        return p
+    p["attn"] = attn_mod.init_attention(ks[0], cfg)
+    p["norm2"] = init_norm(d)
+    if kind == "dense":
+        p["mlp"] = init_mlp(ks[1], d, d_ff, cfg.gated_mlp)
+    elif kind == "moe":
+        p["moe"] = moe_mod.init_moe(ks[1], cfg)
+    elif kind == "hybrid":
+        p["ssm"] = ssm_mod.init_ssm(ks[1], cfg)
+        p["norm_attn"] = init_norm(d)
+        p["norm_ssm"] = init_norm(d)
+        p["mlp"] = init_mlp(ks[2], d, d_ff, cfg.gated_mlp)
+    return p
+
+
+def apply_block(p: dict, cfg: ModelConfig, kind: str, x: jnp.ndarray,
+                positions: jnp.ndarray, window, mode: str,
+                cache: LayerCache) -> tuple[jnp.ndarray, LayerCache, jnp.ndarray]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    x = shard(x, "batch", "seq", None, tag=f"{kind}_in")
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    new_kv, new_ssm = cache.kv, cache.ssm
+    if kind == "ssm":
+        y, new_ssm = ssm_mod.apply_ssm(p["ssm"], cfg, h, cache.ssm, mode)
+        out = shard(x + y, "batch", "seq", None, tag=f"{kind}_out")
+        return out, LayerCache(new_kv, new_ssm), aux
+    if kind == "hybrid":
+        a_out, new_kv = attn_mod.attention_layer(
+            p["attn"], cfg, h, positions, layer_window=window,
+            cache=cache.kv, mode=mode)
+        s_out, new_ssm = ssm_mod.apply_ssm(p["ssm"], cfg, h, cache.ssm, mode)
+        y = (rms_norm(a_out, p["norm_attn"], cfg.norm_eps)
+             + rms_norm(s_out, p["norm_ssm"], cfg.norm_eps)) * 0.5
+        x = x + y
+        x = x + apply_mlp(p["mlp"], rms_norm(x, p["norm2"], cfg.norm_eps), cfg.act)
+        x = shard(x, "batch", "seq", None, tag=f"{kind}_out")
+        return x, LayerCache(new_kv, new_ssm), aux
+    # dense / moe
+    a_out, new_kv = attn_mod.attention_layer(
+        p["attn"], cfg, h, positions, layer_window=window,
+        cache=cache.kv, mode=mode)
+    x = x + a_out
+    h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if kind == "moe":
+        y, aux = moe_mod.apply_moe(p["moe"], cfg, h2)
+    else:
+        y = apply_mlp(p["mlp"], h2, cfg.act)
+    out = shard(x + y, "batch", "seq", None, tag=f"{kind}_out")
+    return out, LayerCache(new_kv, new_ssm), aux
+
+
+# ======================================================================
+# Model init / apply
+# ======================================================================
+def init_lm(key: jax.Array, cfg: ModelConfig) -> dict:
+    """Returns a Param tree (use layers.split_params to get values + specs)."""
+    plan = build_plan(cfg)
+    keys = jax.random.split(key, len(plan.stacks) + 3)
+    params: dict = {"embed": init_embedding(keys[0], cfg.vocab_size, cfg.d_model),
+                    "final_norm": init_norm(cfg.d_model)}
+    stacks = []
+    for i, sp in enumerate(plan.stacks):
+        lkeys = jax.random.split(keys[i + 1], sp.n)
+        layers = [init_block(lkeys[j], cfg, sp.kind, sp.d_ff) for j in range(sp.n)]
+        stacks.append(stack_params(layers) if sp.scan else tuple(layers))
+    params["stacks"] = tuple(stacks)
+    if not cfg.tie_embeddings:
+        params["head"] = mk(keys[-2], (cfg.d_model, cfg.vocab_size),
+                            ("fsdp", "vocab"), scale=0.02)
+    if cfg.mtp_depth:
+        mk_ = jax.random.split(keys[-1], cfg.mtp_depth + 1)
+        params["mtp"] = {
+            "proj": mk(mk_[0], (2 * cfg.d_model, cfg.d_model), ("fsdp", None)),
+            "norm": init_norm(cfg.d_model),
+            "block": init_block(mk_[1], cfg, "dense",
+                                cfg.dense_d_ff or cfg.d_ff),
+        }
+    return params
+
+
+def _remat_wrap(fn, cfg: ModelConfig, mode: str):
+    if mode != "train" or cfg.remat == "none":
+        return fn
+    if cfg.remat == "full":
+        policy = jax.checkpoint_policies.nothing_saveable
+    else:
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+def apply_stacks(params: dict, cfg: ModelConfig, x: jnp.ndarray,
+                 positions: jnp.ndarray, mode: str, caches):
+    """Run all stacks. caches: pytree from init_cache (or None for train)."""
+    plan = build_plan(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for si, sp in enumerate(plan.stacks):
+        sparams = params["stacks"][si]
+        cache_s = caches[si] if caches is not None else None
+        if sp.scan:
+            window = sp.windows[0]
+
+            def layer_fn(carry, xs, _kind=sp.kind, _w=window):
+                xc, aux_c = carry
+                pl, cl = xs
+                if cl is None:
+                    cl = LayerCache(None, None)
+                xo, nc, aux = apply_block(pl, cfg, _kind, xc, positions, _w,
+                                          mode, cl)
+                return (xo, aux_c + aux), nc
+
+            layer_fn = _remat_wrap(layer_fn, cfg, mode)
+            if cache_s is None:
+                (x, aux_total), _ = jax.lax.scan(
+                    lambda c, p_: (layer_fn(c, (p_, None))[0], None),
+                    (x, aux_total), sparams)
+                new_caches.append(None)
+            else:
+                (x, aux_total), ncache = jax.lax.scan(
+                    layer_fn, (x, aux_total), (sparams, cache_s))
+                new_caches.append(ncache)
+        else:
+            ncs = []
+            for li in range(sp.n):
+                cl = (cache_s[li] if cache_s is not None
+                      else LayerCache(None, None))
+                fn = _remat_wrap(
+                    lambda xc, pl, _w=sp.windows[li], _k=sp.kind, _cl=cl:
+                    apply_block(pl, cfg, _k, xc, positions, _w, mode, _cl),
+                    cfg, mode)
+                x, nc, aux = fn(x, sparams[li])
+                aux_total = aux_total + aux
+                ncs.append(nc)
+            new_caches.append(tuple(ncs) if cache_s is not None else None)
+    return x, tuple(new_caches), aux_total
+
+
+def embed_tokens(params: dict, cfg: ModelConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    emb = params["embed"]
+    return jnp.take(emb, tokens, axis=0)
+
+
+def lm_logits(params: dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return x @ head
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+            positions: Optional[jnp.ndarray] = None, mode: str = "train",
+            caches=None, inputs_embeds: Optional[jnp.ndarray] = None,
+            compute_logits: bool = True):
+    """tokens [B,S] -> (logits [B,S,V], new_caches, aux_loss, hidden)."""
+    B, S = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = inputs_embeds if inputs_embeds is not None else embed_tokens(params, cfg, tokens)
+    x = shard(x, "batch", "seq", None, tag="embed_out")
+    x, new_caches, aux = apply_stacks(params, cfg, x, positions, mode, caches)
+    hidden = x
+    if not compute_logits:
+        return None, new_caches, aux, hidden
+    logits = lm_logits(params, cfg, x)
+    logits = shard(logits, "batch", None, "vocab", tag="logits")
+    return logits, new_caches, aux, hidden
+
+
+# ======================================================================
+# Training loss (incl. deepseek MTP)
+# ======================================================================
+def lm_loss(params: dict, cfg: ModelConfig, tokens: jnp.ndarray,
+            labels: jnp.ndarray) -> tuple[jnp.ndarray, dict]:
+    _, _, aux, hidden = forward(params, cfg, tokens, mode="train",
+                                compute_logits=False)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    h_norm = rms_norm(hidden, params["final_norm"], cfg.norm_eps)
+    loss = chunked_softmax_xent(h_norm, head, labels)
+    metrics = {"nll": loss, "aux": aux}
+    total = loss + aux
+    if cfg.mtp_depth and "mtp" in params:
+        # MTP depth 1: predict token t+2 from (hidden_t, embed(label_t))
+        mp = params["mtp"]
+        emb_next = embed_tokens(params, cfg, labels)
+        h = jnp.concatenate(
+            [rms_norm(hidden, mp["norm"], cfg.norm_eps), emb_next], axis=-1)
+        h = h @ mp["proj"]
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        h, _, _ = apply_block(mp["block"], cfg, "dense", h, positions, 0,
+                              "train", LayerCache(None, None))
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        mtp_labels = jnp.concatenate([labels[:, 1:], labels[:, -1:]], axis=1)
+        mtp_loss = chunked_softmax_xent(h, head, mtp_labels)
+        metrics["mtp"] = mtp_loss
+        total = total + 0.3 * mtp_loss
+    metrics["loss"] = total
+    return total, metrics

@@ -1,0 +1,164 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+  compute    = HLO_FLOPs / peak_FLOPs            (cost_analysis is per-device)
+  memory     = HLO_bytes / HBM_bandwidth
+  collective = sum over collective ops of ring-model wire time
+
+cost_analysis() has no collective information, so we parse the optimized HLO
+text: every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute line contributes ring-model bytes-on-wire derived from its
+result shape and replica group size.
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(per direction; ring collectives use both neighbours).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    op: str
+    result_bytes: int
+    group_size: int
+    wire_bytes: float  # ring-model per-device bytes on wire
+    count: int = 1
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _wire_bytes(op: str, result_bytes: int, n: int) -> float:
+    """Per-device ring-model bytes on wire."""
+    if n <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * result_bytes * (n - 1) / n
+    if op == "all-gather":  # result is the gathered (big) buffer
+        return result_bytes * (n - 1) / n
+    if op == "reduce-scatter":  # result is the scattered (small) shard
+        return result_bytes * (n - 1)
+    if op == "all-to-all":
+        return result_bytes * (n - 1) / n
+    if op == "collective-permute":
+        return float(result_bytes)
+    return 0.0
+
+
+def parse_collectives(hlo_text: str) -> list[CollectiveStats]:
+    out: dict[tuple, CollectiveStats] = {}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        op_found: Optional[str] = None
+        for op in COLLECTIVE_OPS:
+            token = f" {op}("
+            if token in stripped or stripped.startswith(f"{op}("):
+                # exclude -start/-done duplicates (count the -start only)
+                if f"{op}-done" in stripped:
+                    op_found = None
+                    break
+                op_found = op
+                break
+        if not op_found:
+            continue
+        # result shapes: everything left of the op token
+        lhs = stripped.split(f"{op_found}(")[0]
+        shapes = _SHAPE_RE.findall(lhs)
+        rbytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        if rbytes == 0:
+            continue
+        n = _group_size(stripped)
+        key = (op_found, rbytes, n)
+        if key in out:
+            out[key].count += 1
+            out[key].wire_bytes += _wire_bytes(op_found, rbytes, n)
+        else:
+            out[key] = CollectiveStats(op_found, rbytes, n,
+                                       _wire_bytes(op_found, rbytes, n))
+    return list(out.values())
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per-device
+    bytes_accessed: float  # per-device HBM traffic
+    collective_wire_bytes: float  # per-device
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    collectives: list
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["collectives"] = [dataclasses.asdict(c) for c in self.collectives]
+        return d
+
+
+def analyze(compiled, *, links: int = 2) -> Roofline:
+    """links: ICI links usable by a ring on the sharded axis (v5e 2D torus:
+    2 per ring direction pair)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    cols = parse_collectives(compiled.as_text())
+    wire = sum(c.wire_bytes for c in cols)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = wire / (links * ICI_BW)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    return Roofline(flops, byts, wire, compute_s, memory_s, collective_s,
+                    dominant, cols)
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """MODEL_FLOPS = 6·N(_active)·tokens for train; 2·N·tokens for inference."""
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch  # decode: one token per sequence
+    return 2.0 * n_active * tokens

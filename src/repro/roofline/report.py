@@ -1,0 +1,61 @@
+"""Render the roofline table from experiments/dryrun/*.json.
+
+  python -m repro.roofline.report [--dir experiments/dryrun] [--pod2]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    return f"{x * 1e3:.1f}ms"
+
+
+def load(dir_: str, multi_pod: bool):
+    rows = []
+    suffix = "pod2" if multi_pod else "pod1"
+    for path in sorted(glob.glob(os.path.join(dir_, f"*__{suffix}.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--pod2", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.dir, args.pod2)
+    print("| arch | shape | status | mem/chip | compute | memory | coll | "
+          "dominant | useful | bound-frac |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | {r['status']} | - | - | "
+                  f"- | - | - | - | - |")
+            continue
+        rf = r.get("roofline", {})
+        mem = r.get("memory", {}).get("peak_per_device_gb", "-")
+        if "compute_s" not in rf:
+            dom = rf.get("dominant", "?")
+            print(f"| {r['arch']} | {r['shape']} | ok(gate) | {mem} | - | - "
+                  f"| - | {dom} | - | - |")
+            continue
+        c, m, x = rf["compute_s"], rf["memory_s"], rf["collective_s"]
+        dom = rf["dominant"]
+        tot = max(c, m, x)
+        frac = c / tot if tot else 0.0  # fraction of bound time doing math
+        print(f"| {r['arch']} | {r['shape']} | ok | {mem}GB | {fmt_s(c)} | "
+              f"{fmt_s(m)} | {fmt_s(x)} | **{dom}** | "
+              f"{r.get('useful_flops_ratio', 0):.2f} | {frac:.2f} |")
+
+
+if __name__ == "__main__":
+    main()

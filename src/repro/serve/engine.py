@@ -1,0 +1,192 @@
+"""Serving engine: prefill / decode step factories + a host-level batch loop.
+
+``make_prefill_step`` / ``make_decode_step`` are the functions the dry-run
+lowers for the inference shape cells (`prefill_32k`, `decode_32k`,
+`long_500k`).  ``generate`` drives them for the examples; ``SlotServer`` is a
+minimal continuous-batching manager (fixed slot count, per-slot lengths,
+greedy refill) demonstrating how the decode step serves mixed-length traffic.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec as encdec_mod
+from repro.models import transformer as transformer_mod
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    if cfg.encdec:
+        def prefill(params, batch, caches):
+            return encdec_mod.encdec_prefill(params, cfg, batch["features"],
+                                             batch["tokens"], caches)
+    else:
+        def prefill(params, batch, caches):
+            logits, caches, _, _ = transformer_mod.forward(
+                params, cfg, batch["tokens"], mode="prefill", caches=caches)
+            return logits[:, -1:], caches
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    if cfg.encdec:
+        def decode(params, token, caches):
+            return encdec_mod.encdec_decode(params, cfg, token, caches)
+    else:
+        def decode(params, token, caches):
+            pos = _cache_pos(caches)
+            B = token.shape[0]
+            positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+            logits, caches, _, _ = transformer_mod.forward(
+                params, cfg, token, positions=positions, mode="decode",
+                caches=caches)
+            return logits, caches
+    return decode
+
+
+def _cache_pos(caches) -> jnp.ndarray:
+    """Current length: first KV position found in the cache tree.
+    Pure-SSM models are position-independent (no rope on state updates), so
+    zero is returned when no KV cache exists."""
+    from repro.models.transformer import LayerCache
+
+    for stack in caches:
+        if stack is None:
+            continue
+        if isinstance(stack, LayerCache):
+            leaves = (stack,)
+        elif isinstance(stack, tuple):
+            leaves = stack
+        else:
+            leaves = (stack,)
+        for lc in leaves:
+            if isinstance(lc, LayerCache) and lc.kv is not None:
+                p = lc.kv.pos
+                return p if p.ndim == 0 else p[0]
+    return jnp.zeros((), jnp.int32)
+
+
+def init_caches(cfg: ModelConfig, batch: int, s_max: int):
+    if cfg.encdec:
+        return encdec_mod.init_dec_cache(cfg, batch, s_max)
+    return transformer_mod.init_cache(cfg, batch, s_max)
+
+
+# ======================================================================
+def generate(params, cfg: ModelConfig, prompt: jnp.ndarray, max_new: int,
+             s_max: Optional[int] = None, temperature: float = 0.0,
+             key: Optional[jax.Array] = None,
+             features: Optional[jnp.ndarray] = None) -> np.ndarray:
+    """Greedy/temperature sampling loop (host-driven, jitted steps)."""
+    B, S = prompt.shape
+    s_max = s_max or (S + max_new)
+    caches = init_caches(cfg, B, s_max)
+    prefill = jax.jit(make_prefill_step(cfg))
+    decode = jax.jit(make_decode_step(cfg), donate_argnums=(2,))
+    batch = {"tokens": prompt}
+    if cfg.encdec:
+        batch["features"] = features
+    logits, caches = prefill(params, batch, caches)
+    out = []
+    tok = _sample(logits[:, -1], temperature, key)[:, None]  # [B, 1]
+    out.append(np.asarray(tok[:, 0]))
+    for i in range(max_new - 1):
+        logits, caches = decode(params, tok, caches)
+        if key is not None:
+            key = jax.random.fold_in(key, i)
+        tok = _sample(logits[:, -1], temperature, key)[:, None]
+        out.append(np.asarray(tok[:, 0]))
+    return np.concatenate([np.asarray(prompt)] + [o[:, None] for o in out],
+                          axis=1)
+
+
+def _sample(logits: jnp.ndarray, temperature: float, key) -> jnp.ndarray:
+    if temperature <= 0.0 or key is None:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key, logits / temperature, axis=-1)
+
+
+# ======================================================================
+class Request(NamedTuple):
+    rid: int
+    prompt: np.ndarray  # [S]
+    max_new: int
+
+
+class SlotServer:
+    """Minimal continuous batching: fixed decode batch, greedy slot refill.
+
+    Mirrors the ASYMP bounded-queue idea: a fixed-capacity slot buffer with
+    backpressure (requests queue until a slot frees).  Caller pads prompts to
+    one fixed length (the cache position counter is shared across slots)."""
+
+    def __init__(self, params, cfg: ModelConfig, num_slots: int, s_max: int):
+        self.params, self.cfg = params, cfg
+        self.num_slots, self.s_max = num_slots, s_max
+        self.caches = init_caches(cfg, num_slots, s_max)
+        self.prefill = jax.jit(make_prefill_step(cfg))
+        self.decode = jax.jit(make_decode_step(cfg))
+        self.queue: list[Request] = []
+        self.active: dict[int, dict] = {}  # slot -> {rid, remaining, tokens}
+        self.cur = jnp.zeros((num_slots, 1), jnp.int32)
+        self.done: dict[int, np.ndarray] = {}
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.num_slots):
+            if slot in self.active or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            # per-slot prefill (batch of 1 into the slot's cache row)
+            prompt = jnp.asarray(req.prompt)[None]
+            caches1 = init_caches(self.cfg, 1, self.s_max)
+            logits, caches1 = self.prefill(self.params, {"tokens": prompt},
+                                           caches1)
+            self.caches = _write_slot(self.caches, caches1, slot,
+                                      self.num_slots)
+            tok = int(jnp.argmax(logits[0, -1]))
+            self.cur = self.cur.at[slot, 0].set(tok)
+            self.active[slot] = {"rid": req.rid, "remaining": req.max_new - 1,
+                                 "tokens": [tok]}
+
+    def step(self):
+        self._admit()
+        if not self.active:
+            return
+        logits, self.caches = self.decode(self.params, self.cur, self.caches)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for slot in list(self.active):
+            st = self.active[slot]
+            st["tokens"].append(int(nxt[slot]))
+            st["remaining"] -= 1
+            if st["remaining"] <= 0:
+                self.done[st["rid"]] = np.array(st["tokens"])
+                del self.active[slot]
+        self.cur = jnp.asarray(nxt)[:, None]
+
+    def run(self):
+        while self.queue or self.active:
+            self.step()
+        return self.done
+
+
+def _write_slot(full_tree, one_tree, slot: int, num_slots: int):
+    """Copy batch-of-1 cache rows into `slot` of the full cache tree."""
+    def write(full, one):
+        if not hasattr(full, "shape") or full.ndim == 0:
+            return full
+        # stacked caches have a leading layer dim; batch dim is where shapes
+        # differ between full (num_slots) and one (1)
+        for axis in range(full.ndim):
+            if full.shape[axis] == num_slots and one.shape[axis] == 1:
+                idx = [slice(None)] * full.ndim
+                idx[axis] = slice(slot, slot + 1)
+                return full.at[tuple(idx)].set(one)
+        return full  # scalar pos etc.
+    return jax.tree.map(write, full_tree, one_tree)

@@ -1,0 +1,181 @@
+"""Optimizers: AdamW (fp32 moments) and Adafactor (factored second moment).
+
+Adafactor exists because deepseek-v3-671b cannot hold 8 bytes/param of Adam
+state on 512 x 16 GB chips; factoring the second moment drops optimizer state
+to ~4 bytes/param total.
+
+Both expose the same functional triple:
+    init(params) -> state
+    update(grads, state, params, lr) -> (new_params, new_state)
+    state_axes(param_axes) -> logical-axes tree for the state (sharding)
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def is_axes(x) -> bool:
+    """Leaf predicate for logical-axes trees (tuples of str|None)."""
+    return isinstance(x, tuple) and all(e is None or isinstance(e, str) for e in x)
+
+
+# ======================================================================
+# schedules / clipping
+# ======================================================================
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+# ======================================================================
+# AdamW
+# ======================================================================
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+class AdamW:
+    def __init__(self, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1):
+        self.b1, self.b2, self.eps, self.wd = b1, b2, eps, weight_decay
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(jnp.zeros((), jnp.int32),
+                          jax.tree.map(zeros, params),
+                          jax.tree.map(zeros, params))
+
+    def update(self, grads, state: AdamWState, params, lr):
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        new_m = jax.tree.map(
+            lambda g, m: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            grads, state.m)
+        new_v = jax.tree.map(
+            lambda g, v: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            grads, state.v)
+
+        def upd(p, m, v):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                u = u + self.wd * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, new_m, new_v)
+        return new_params, AdamWState(step, new_m, new_v)
+
+    def state_axes(self, param_axes) -> "AdamWState":
+        return AdamWState((), param_axes, param_axes)
+
+
+# ======================================================================
+# Adafactor (Shazeer & Stern 2018), beta1=0 variant
+# ======================================================================
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    vr: Any  # row moments (last dim reduced)
+    vc: Any  # col moments (second-to-last dim reduced)
+    v: Any  # full moments for <2D params
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= 2 and p.shape[-2] >= 2
+
+
+class Adafactor:
+    def __init__(self, eps=1e-30, clip_threshold=1.0, weight_decay=0.0):
+        self.eps, self.clip, self.wd = eps, clip_threshold, weight_decay
+
+    def init(self, params) -> AdafactorState:
+        vr = lambda p: (jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p)
+                        else jnp.zeros((1,), jnp.float32))
+        vc = lambda p: (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                        if _factored(p) else jnp.zeros((1,), jnp.float32))
+        v = lambda p: (jnp.zeros((1,), jnp.float32) if _factored(p)
+                       else jnp.zeros(p.shape, jnp.float32))
+        return AdafactorState(jnp.zeros((), jnp.int32),
+                              jax.tree.map(vr, params),
+                              jax.tree.map(vc, params),
+                              jax.tree.map(v, params))
+
+    def update(self, grads, state: AdafactorState, params, lr):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta2 = 1.0 - t ** -0.8  # Shazeer decay schedule
+        eps = self.eps
+
+        new_vr = jax.tree.map(
+            lambda g, vr: (beta2 * vr + (1 - beta2)
+                           * jnp.mean(jnp.square(g.astype(jnp.float32)) + eps, -1))
+            if _factored(g) else vr, grads, state.vr)
+        new_vc = jax.tree.map(
+            lambda g, vc: (beta2 * vc + (1 - beta2)
+                           * jnp.mean(jnp.square(g.astype(jnp.float32)) + eps, -2))
+            if _factored(g) else vc, grads, state.vc)
+        new_v = jax.tree.map(
+            lambda g, v: v if _factored(g)
+            else beta2 * v + (1 - beta2) * (jnp.square(g.astype(jnp.float32)) + eps),
+            grads, state.v)
+
+        def upd(p, g, vr, vc, v):
+            gf = g.astype(jnp.float32)
+            if _factored(p):
+                denom = (vr[..., None]
+                         / jnp.mean(vr, axis=-1, keepdims=True)[..., None]
+                         ) * vc[..., None, :]
+                u = gf / jnp.sqrt(denom + eps)
+            else:
+                u = gf / jnp.sqrt(v + eps)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / self.clip)
+            if self.wd and p.ndim >= 2:
+                u = u + self.wd * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, grads, new_vr, new_vc, new_v)
+        return new_params, AdafactorState(step, new_vr, new_vc, new_v)
+
+    def state_axes(self, param_axes) -> "AdafactorState":
+        def vr_ax(ax):
+            return tuple(ax[:-1]) if len(ax) >= 2 else (None,)
+
+        def vc_ax(ax):
+            return tuple(ax[:-2]) + tuple(ax[-1:]) if len(ax) >= 2 else (None,)
+
+        def v_ax(ax):
+            return (None,) if len(ax) >= 2 else tuple(ax)
+
+        return AdafactorState(
+            (),
+            jax.tree.map(vr_ax, param_axes, is_leaf=is_axes),
+            jax.tree.map(vc_ax, param_axes, is_leaf=is_axes),
+            jax.tree.map(v_ax, param_axes, is_leaf=is_axes),
+        )
+
+
+def get_optimizer(name: str, **kw):
+    return {"adamw": AdamW, "adafactor": Adafactor}[name](**kw)

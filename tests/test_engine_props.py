@@ -1,0 +1,104 @@
+"""Property-based tests (hypothesis) on the engine's invariants."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import GraphConfig
+from repro.core import engine as E
+from repro.core import graph as G
+from repro.core import merger
+from repro.core import programs as PR
+
+from conftest import csr_edges
+
+
+@st.composite
+def graph_configs(draw):
+    n = draw(st.sampled_from([64, 128, 256]))
+    deg = draw(st.integers(2, 6))
+    gen = draw(st.sampled_from(["rmat", "er", "chain"]))
+    shards = draw(st.sampled_from([1, 2, 4]))
+    frac = draw(st.sampled_from([1.0, 0.5, 0.1]))
+    pri = draw(st.sampled_from(["disabled", "linear", "log"]))
+    seed = draw(st.integers(0, 100))
+    return GraphConfig(name="h", algorithm="cc", num_vertices=n,
+                       avg_degree=deg, generator=gen, num_shards=shards,
+                       priority=pri, enforce_fraction=frac, seed=seed)
+
+
+@settings(max_examples=12, deadline=None)
+@given(graph_configs())
+def test_cc_always_matches_oracle(cfg):
+    """CC is exact for every topology / sharding / priority / fraction."""
+    g = G.build_sharded_graph(cfg)
+    state, totals = E.run_to_convergence(cfg, graph=g)
+    assert totals["converged"]
+    out = merger.extract(state, g, PR.get_program(cfg))
+    oracle = G.cc_oracle(g.num_real_vertices, csr_edges(g))
+    assert (out == oracle).all()
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 50), st.sampled_from([0.1, 0.5, 1.0]))
+def test_monotone_descent_invariant(seed, frac):
+    """Vertex values never increase across ticks (min-semiring safety) and
+    the label set only shrinks toward component minima."""
+    cfg = GraphConfig(name="h", algorithm="cc", num_vertices=128,
+                      avg_degree=4, generator="rmat", num_shards=2,
+                      enforce_fraction=frac, seed=seed)
+    g = G.build_sharded_graph(cfg)
+    prog = PR.get_program(cfg)
+    ep = E.default_params(cfg, g)
+    tick = E.make_local_tick(prog, ep, prog.weighted)
+    state = E.init_state(prog, g)
+    dg = E.to_device_graph(g)
+    prev = np.asarray(state.values)
+    for _ in range(20):
+        state, stats, _ = tick(state, dg)
+        cur = np.asarray(state.values)
+        assert (cur <= prev).all()
+        prev = cur
+        if int(stats.active) == 0:
+            break
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 50))
+def test_messages_bounded_by_budget(seed):
+    """Per tick, sent messages never exceed M * D (bounded queues)."""
+    cfg = GraphConfig(name="h", algorithm="cc", num_vertices=256,
+                      avg_degree=6, generator="rmat", num_shards=4,
+                      enforce_fraction=1.0, seed=seed)
+    g = G.build_sharded_graph(cfg)
+    prog = PR.get_program(cfg)
+    ep = E.default_params(cfg, g)
+    tick = E.make_local_tick(prog, ep, prog.weighted)
+    state = E.init_state(prog, g)
+    dg = E.to_device_graph(g)
+    bound = ep.num_shards * ep.max_vertices_per_tick * ep.degree_window
+    for _ in range(10):
+        state, stats, _ = tick(state, dg)
+        assert int(stats.sent) <= bound
+        if int(stats.active) == 0:
+            break
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 30), st.integers(1, 6))
+def test_fault_injection_any_time_preserves_result(seed, fail_tick):
+    """Failing any shard at any tick never corrupts the fixpoint."""
+    from repro.core.faults import FaultPlan
+    cfg = GraphConfig(name="h", algorithm="cc", num_vertices=256,
+                      avg_degree=5, generator="rmat", num_shards=4,
+                      enforce_fraction=0.5, seed=seed, checkpoint_every=3,
+                      replay_log_ticks=4)
+    g = G.build_sharded_graph(cfg)
+    oracle = G.cc_oracle(g.num_real_vertices, csr_edges(g))
+    plan = FaultPlan(fail_fraction=0.25, start_tick=fail_tick, every=3,
+                     seed=seed)
+    state, totals = E.run_to_convergence(cfg, graph=g, fault_plan=plan)
+    out = merger.extract(state, g, PR.get_program(cfg))
+    assert totals["converged"]
+    assert (out == oracle).all()

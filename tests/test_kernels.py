@@ -1,0 +1,134 @@
+"""Pallas kernel validation: shape/dtype sweeps + hypothesis, vs ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref as R
+from repro.kernels.ops import build_pulled_graph, frontier_pull_step
+from repro.kernels.semiring_spmv import EDGE_BLOCK, TILE, spmv_partials
+
+
+def _rand(key, n, dtype, semiring):
+    if dtype == jnp.int32:
+        vals = jax.random.randint(key, (n,), 0, 10_000).astype(jnp.int32)
+    else:
+        vals = jax.random.uniform(key, (n,), dtype, 0.0, 10.0)
+    k2, k3 = jax.random.split(key)
+    dst = jax.random.randint(k2, (n,), -1, TILE)
+    w = jax.random.uniform(k3, (n,), jnp.float32, 0.1, 1.0).astype(dtype)
+    return vals, dst, w
+
+
+def _cmp(kp, rp, dtype):
+    kpn, rpn = np.asarray(kp, np.float64), np.asarray(rp, np.float64)
+    both_inf = np.isinf(kpn) & np.isinf(rpn)
+    np.testing.assert_allclose(np.where(both_inf, 0, kpn),
+                               np.where(both_inf, 0, rpn),
+                               rtol=1e-5, atol=1e-5)
+
+
+class TestKernelVsOracle:
+    @pytest.mark.parametrize("semiring,dtype", [
+        ("min", jnp.int32), ("min", jnp.float32),
+        ("min_plus", jnp.float32),
+        ("plus_times", jnp.float32),
+    ])
+    @pytest.mark.parametrize("n_blocks", [1, 3, 8])
+    def test_sweep(self, semiring, dtype, n_blocks):
+        key = jax.random.PRNGKey(n_blocks)
+        n = n_blocks * EDGE_BLOCK
+        vals, dst, w = _rand(key, n, dtype, semiring)
+        kp = spmv_partials(vals, dst, w, semiring=semiring, interpret=True)
+        rp = R.spmv_partials_ref(vals, dst, w, semiring=semiring)
+        assert kp.shape == (n_blocks, TILE)
+        assert kp.dtype == dtype
+        _cmp(kp, rp, dtype)
+
+    def test_mxu_path_matches(self):
+        key = jax.random.PRNGKey(7)
+        n = 4 * EDGE_BLOCK
+        vals, dst, w = _rand(key, n, jnp.float32, "plus_times")
+        a = spmv_partials(vals, dst, w, semiring="plus_times", use_mxu=True,
+                          interpret=True)
+        b = R.spmv_partials_ref(vals, dst, w, semiring="plus_times")
+        _cmp(a, b, jnp.float32)
+
+    def test_all_padding_block(self):
+        n = EDGE_BLOCK
+        vals = jnp.zeros((n,), jnp.float32)
+        dst = jnp.full((n,), -1, jnp.int32)
+        kp = spmv_partials(vals, dst, None, semiring="min", interpret=True)
+        assert bool(jnp.all(jnp.isinf(kp)))
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(1, 4), st.integers(0, 2 ** 31 - 1),
+           st.sampled_from(["min", "min_plus", "plus_times"]))
+    def test_hypothesis_random(self, n_blocks, seed, semiring):
+        key = jax.random.PRNGKey(seed)
+        n = n_blocks * EDGE_BLOCK
+        vals, dst, w = _rand(key, n, jnp.float32, semiring)
+        kp = spmv_partials(vals, dst, w, semiring=semiring, interpret=True)
+        rp = R.spmv_partials_ref(vals, dst, w, semiring=semiring)
+        _cmp(kp, rp, jnp.float32)
+
+
+class TestFullPropagation:
+    def test_pull_step_matches_full_oracle(self, rmat_cc_graph):
+        _, g = rmat_cc_graph
+        pg = build_pulled_graph(g)
+        values = jnp.arange(pg.num_vertices, dtype=jnp.int32)
+        out_k = frontier_pull_step(values, pg, semiring="min",
+                                   use_kernel=True)
+        out_r = frontier_pull_step(values, pg, semiring="min",
+                                   use_kernel=False)
+        assert (out_k == out_r).all()
+        # direct oracle comparison on real edges
+        src = pg.edge_src
+        dst_global = pg.block_tile.repeat(EDGE_BLOCK) * TILE + pg.edge_dst_local
+        valid = src >= 0
+        ref = np.arange(pg.num_vertices)
+        np.minimum.at(ref, dst_global[valid], np.asarray(values)[src[valid]])
+        assert (np.asarray(out_k) == ref).all()
+
+    def test_pagerank_iteration(self, rmat_cc_graph):
+        """plus_times semiring: one power-iteration step sums contributions."""
+        _, g = rmat_cc_graph
+        pg = build_pulled_graph(g)
+        deg = np.maximum(g.degrees().reshape(-1).astype(np.float32), 1.0)
+        n = pg.num_vertices
+        contrib = (np.ones(n, np.float32) / deg[:n] if len(deg) >= n
+                   else np.pad(1.0 / deg, (0, n - len(deg))))
+        out = frontier_pull_step(jnp.asarray(contrib[:n]), pg,
+                                 semiring="plus_times", use_kernel=True)
+        # oracle
+        src, dstl, bt = pg.edge_src, pg.edge_dst_local, pg.block_tile
+        dst_global = bt.repeat(EDGE_BLOCK) * TILE + dstl
+        valid = src >= 0
+        ref = np.zeros(n, np.float32)
+        np.add.at(ref, dst_global[valid], contrib[:n][src[valid]])
+        np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-5)
+
+
+class TestPageRank:
+    def test_pagerank_stationary_and_replay_safe(self, rmat_cc_graph):
+        """Pull-mode PR (paper §3.3 idempotent formulation): converges to a
+        stationary distribution; recomputation (= message replay) is a no-op."""
+        import numpy as np
+        from repro.kernels.ops import pagerank
+        _, g = rmat_cc_graph
+        r = pagerank(g, iters=40)
+        total = float(jnp.sum(r))
+        assert abs(total - 1.0) < 0.01  # dangling mass redistributed
+        # one more iteration barely moves it (stationarity)
+        r2 = pagerank(g, iters=41)
+        assert float(jnp.max(jnp.abs(r - r2))) < 1e-4
+        # star graph: hub dominates
+        from repro.configs.base import GraphConfig
+        from repro.core.graph import build_sharded_graph
+        cfg = GraphConfig(name="s", algorithm="cc", num_vertices=256,
+                          avg_degree=4, generator="star", num_shards=4)
+        gs = build_sharded_graph(cfg)
+        rs = pagerank(gs, iters=40)
+        assert int(np.argmax(np.asarray(rs))) == 0

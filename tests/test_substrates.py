@@ -1,0 +1,221 @@
+"""Trainer / optimizer / checkpoint / data-pipeline / compression tests."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import DataPipeline, SyntheticSource
+from repro.dist import compression as C
+from repro.dist.sharding import ShardingRules
+from repro.ft.checkpoint import CheckpointManager
+from repro.train import optimizer as opt_mod
+from repro.train import trainer as TR
+
+
+class TestTrainer:
+    def test_loss_decreases(self):
+        cfg = get_config("qwen3-4b").reduced()
+        state, _ = TR.init_state(cfg, jax.random.PRNGKey(0))
+        step = jax.jit(TR.make_train_step(cfg, lr=1e-3))
+        pipe = DataPipeline(SyntheticSource(cfg.vocab_size, 32), 8)
+        losses = []
+        for _ in range(5):
+            b = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+            state, m = step(state, b)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0]
+
+    def test_microbatching_matches_full_batch(self):
+        cfg = get_config("chatglm3-6b").reduced()
+        key = jax.random.PRNGKey(1)
+        state1, _ = TR.init_state(cfg, key)
+        state2 = jax.tree.map(lambda x: x, state1)
+        b = DataPipeline(SyntheticSource(cfg.vocab_size, 16), 8).next_batch()
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        s1, m1 = jax.jit(TR.make_train_step(cfg, lr=1e-3))(state1, batch)
+        s2, m2 = jax.jit(TR.make_train_step(cfg, lr=1e-3, microbatches=4)
+                         )(state2, batch)
+        for a, b_ in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b_, np.float32),
+                                       rtol=0.05, atol=5e-3)
+
+    def test_adafactor_converges(self):
+        import dataclasses
+        cfg = dataclasses.replace(get_config("qwen3-4b").reduced(),
+                                  optimizer="adafactor")
+        state, _ = TR.init_state(cfg, jax.random.PRNGKey(0))
+        step = jax.jit(TR.make_train_step(cfg, lr=1e-2))
+        pipe = DataPipeline(SyntheticSource(cfg.vocab_size, 32), 8)
+        losses = []
+        for _ in range(5):
+            b = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+            state, m = step(state, b)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0]
+
+    def test_adafactor_state_smaller_than_adam(self):
+        cfg = get_config("chatglm3-6b").reduced()
+        params, _ = TR.init_state(cfg, jax.random.PRNGKey(0))
+        ad = opt_mod.AdamW().init(params.params)
+        af = opt_mod.Adafactor().init(params.params)
+        sz = lambda t: sum(x.size * x.dtype.itemsize
+                           for x in jax.tree.leaves(t))
+        assert sz(af) < 0.2 * sz(ad)
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_retention(self):
+        cfg = get_config("qwen3-4b").reduced()
+        state, _ = TR.init_state(cfg, jax.random.PRNGKey(0))
+        with tempfile.TemporaryDirectory() as d:
+            cm = CheckpointManager(d, keep=2)
+            for s in (1, 2, 3, 4):
+                cm.save(s, state, metadata={"pipeline": {"offset": s * 8}})
+            assert cm.all_steps() == [3, 4]  # retention
+            restored, meta = cm.restore()
+            assert meta["pipeline"]["offset"] == 32
+            for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+                np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                              np.asarray(b, np.float32))
+
+    def test_async_commit_is_atomic(self):
+        cfg = get_config("qwen3-4b").reduced()
+        state, _ = TR.init_state(cfg, jax.random.PRNGKey(0))
+        with tempfile.TemporaryDirectory() as d:
+            cm = CheckpointManager(d)
+            cm.save(7, state, blocking=False)
+            cm.wait()
+            assert cm.latest_step() == 7
+            # a partial dir without manifest must be invisible
+            os.makedirs(os.path.join(d, "step_0000000009"))
+            assert cm.latest_step() == 7
+
+    def test_exact_batch_replay_after_restore(self):
+        """ASYMP step 3 for training: pipeline offsets replay exactly."""
+        src = SyntheticSource(1000, 16, seed=3)
+        p1 = DataPipeline(src, 4)
+        batches = [p1.next_batch() for _ in range(3)]
+        snap = p1.snapshot()
+        after = [p1.next_batch() for _ in range(2)]
+        p2 = DataPipeline(src, 4)
+        p2.restore(snap)
+        replay = [p2.next_batch() for _ in range(2)]
+        for a, b in zip(after, replay):
+            np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+class TestDataPipeline:
+    def test_shards_are_disjoint_and_cover(self):
+        src = SyntheticSource(1000, 8, seed=1)
+        full = DataPipeline(src, 8).next_batch()["tokens"]
+        parts = [DataPipeline(src, 8, shard_index=i, num_shards=4
+                              ).next_batch()["tokens"] for i in range(4)]
+        np.testing.assert_array_equal(np.concatenate(parts), full)
+
+    def test_deterministic(self):
+        a = DataPipeline(SyntheticSource(50, 8, seed=5), 4).next_batch()
+        b = DataPipeline(SyntheticSource(50, 8, seed=5), 4).next_batch()
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+
+class TestCompression:
+    def test_quantize_roundtrip_error_bounded(self):
+        g = jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 0.01
+        q, s = C.quantize_int8(g)
+        back = C.dequantize_int8(q, s, g.shape, jnp.float32)
+        rel = float(jnp.max(jnp.abs(back - g)) / jnp.max(jnp.abs(g)))
+        assert rel < 1.0 / 100  # 127-level quantization
+
+    def test_compressed_psum_matches_mean(self):
+        """int8 EF all-reduce ~= exact mean; error feedback is carried."""
+        devs = jax.devices()
+        from jax.sharding import Mesh, PartitionSpec as P
+        from jax import shard_map
+        mesh = Mesh(np.array(devs[:1]), ("d",))
+        g = jax.random.normal(jax.random.PRNGKey(1), (512,)) * 0.1
+
+        def f(g):
+            out, err = C.compressed_psum(g, "d")
+            return out, err
+
+        out, err = jax.jit(shard_map(f, mesh=mesh, in_specs=P(),
+                                     out_specs=P(), check_vma=False))(g)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(g),
+                                   atol=2e-3)
+        # error feedback must equal the quantization residual
+        np.testing.assert_allclose(np.asarray(g - out), np.asarray(err),
+                                   atol=1e-6)
+
+
+class TestShardingRules:
+    def test_divisibility_fallback(self):
+        import jax.sharding as js
+        devs = np.array(jax.devices()[:1])
+        mesh = js.Mesh(devs.reshape(1, 1), ("data", "model"))
+        rules = ShardingRules()
+        spec = rules.resolve(mesh, ("batch", "heads", None), (4, 25, 64), "t")
+        assert spec == js.PartitionSpec("data", "model", None)
+        # heads=25 on model=1 divides; force indivisible via fake mesh shape
+        spec2 = rules.resolve(mesh, (None, "kv_seq", None), (1, 7, 3), "t")
+        assert spec2[1] == "model"  # 7 % 1 == 0
+
+    def test_axis_used_once(self):
+        import jax.sharding as js
+        devs = np.array(jax.devices()[:1])
+        mesh = js.Mesh(devs.reshape(1, 1), ("data", "model"))
+        rules = ShardingRules()
+        spec = rules.resolve(mesh, ("kv_seq", "kv_heads"), (8, 8), "t")
+        # both want `model`; second must replicate
+        assert spec == js.PartitionSpec("model", None)
+
+
+class TestElastic:
+    def test_graph_engine_resize_mid_run(self):
+        """ASYMP elastic restart: checkpoint at 8 shards, resume at 4 (and
+        2), converge to the exact fixpoint (self-stabilization covers any
+        in-flight messages lost at the resize)."""
+        import dataclasses
+        from repro.configs.base import GraphConfig
+        from repro.core import engine as E, graph as G, merger, programs as PR
+        from repro.ft.elastic import repartition_state
+        import sys, os
+        sys.path.insert(0, os.path.dirname(__file__))
+        from conftest import csr_edges
+
+        cfg8 = GraphConfig(name="t", algorithm="cc", num_vertices=512,
+                           avg_degree=6, generator="rmat", num_shards=8,
+                           enforce_fraction=0.5)
+        g8 = G.build_sharded_graph(cfg8)
+        oracle = G.cc_oracle(g8.num_real_vertices, csr_edges(g8))
+        # run half-way on 8 shards
+        prog = PR.get_program(cfg8)
+        ep = E.default_params(cfg8, g8)
+        tick = E.make_local_tick(prog, ep, prog.weighted)
+        state = E.init_state(prog, g8)
+        dg = E.to_device_graph(g8)
+        for _ in range(6):
+            state, stats, _ = tick(state, dg)
+        for new_shards in (4, 2):
+            import jax.numpy as jnp
+            cfgN = dataclasses.replace(cfg8, num_shards=new_shards)
+            gN = G.build_sharded_graph(cfgN)
+            s = repartition_state(state, g8, gN)
+            # self-stabilizing safety: re-activate everything once (covers
+            # frontier misalignment from the resize)
+            gidsN = jnp.arange(gN.num_shards * gN.vs).reshape(gN.num_shards,
+                                                             gN.vs)
+            s = s._replace(active=gidsN < gN.num_real_vertices)
+            epN = E.default_params(cfgN, gN)
+            tickN = E.make_local_tick(prog, epN, prog.weighted)
+            dgN = E.to_device_graph(gN)
+            for _ in range(5000):
+                s, st, _ = tickN(s, dgN)
+                if int(st.active) == 0:
+                    break
+            out = merger.extract(s, gN, prog)
+            assert (out == oracle).all(), new_shards

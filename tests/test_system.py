@@ -1,0 +1,183 @@
+"""End-to-end behaviour of the ASYMP engine (the paper's system)."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import GraphConfig
+from repro.core import engine as E
+from repro.core import graph as G
+from repro.core import merger
+from repro.core import programs as PR
+from repro.core.faults import FaultPlan
+
+from conftest import csr_edges, dijkstra_directed
+
+
+def run(cfg, graph=None, **kw):
+    graph = graph or G.build_sharded_graph(cfg)
+    state, totals = E.run_to_convergence(cfg, graph=graph, **kw)
+    out = merger.extract(state, graph, PR.get_program(cfg))
+    return graph, out, totals
+
+
+# ======================================================================
+class TestConnectedComponents:
+    def test_rmat_matches_union_find(self, rmat_cc_graph):
+        cfg, g = rmat_cc_graph
+        _, out, totals = run(cfg, graph=g)
+        oracle = G.cc_oracle(g.num_real_vertices, csr_edges(g))
+        assert totals["converged"]
+        assert (out == oracle).all()
+
+    @pytest.mark.parametrize("generator", ["er", "grid", "chain", "star"])
+    def test_topologies(self, generator):
+        n = {"er": 512, "grid": 400, "chain": 256, "star": 256}[generator]
+        cfg = GraphConfig(name="t", algorithm="cc", num_vertices=n,
+                          avg_degree=4, generator=generator, num_shards=4,
+                          enforce_fraction=0.5)
+        g, out, totals = run(cfg)
+        oracle = G.cc_oracle(g.num_real_vertices, csr_edges(g))
+        assert totals["converged"]
+        assert (out == oracle).all(), generator
+
+    def test_chain_needs_many_ticks_star_few(self):
+        """Topology-dependent convergence (paper: diameter-bound rounds)."""
+        ticks = {}
+        for gen, n in [("chain", 256), ("star", 256)]:
+            cfg = GraphConfig(name="t", algorithm="cc", num_vertices=n,
+                              avg_degree=4, generator=gen, num_shards=4,
+                              enforce_fraction=1.0)
+            _, _, totals = run(cfg)
+            ticks[gen] = totals["ticks"]
+        assert ticks["chain"] > ticks["star"]
+
+    @pytest.mark.parametrize("shards", [1, 2, 8])
+    def test_shard_count_invariance(self, shards):
+        cfg = GraphConfig(name="t", algorithm="cc", num_vertices=512,
+                          avg_degree=6, generator="rmat", num_shards=shards,
+                          enforce_fraction=0.5)
+        g, out, totals = run(cfg)
+        oracle = G.cc_oracle(g.num_real_vertices, csr_edges(g))
+        assert (out == oracle).all()
+
+
+# ======================================================================
+class TestSSSP:
+    def test_matches_dijkstra(self):
+        cfg = GraphConfig(name="t", algorithm="sssp", num_vertices=512,
+                          avg_degree=6, generator="rmat", num_shards=4,
+                          weighted=True, enforce_fraction=0.3)
+        g, out, totals = run(cfg)
+        edges, w = csr_edges(g, with_weights=True)
+        oracle = dijkstra_directed(g.num_real_vertices, edges[:, 0],
+                                   edges[:, 1], w)
+        finite = np.isfinite(oracle)
+        assert totals["converged"]
+        np.testing.assert_allclose(out[finite], oracle[finite], rtol=1e-5)
+        assert np.all(np.isinf(out[~finite]))
+
+    def test_bfs_hops(self):
+        cfg = GraphConfig(name="t", algorithm="bfs", num_vertices=256,
+                          avg_degree=4, generator="chain", num_shards=4,
+                          enforce_fraction=1.0)
+        g, out, totals = run(cfg)
+        # chain: hop count of vertex i from source 0 is i
+        expect = np.arange(g.num_real_vertices)
+        assert (out[: g.num_real_vertices] == expect).all()
+
+
+# ======================================================================
+class TestPriority:
+    """Paper §5.6: stronger priority enforcement -> fewer messages."""
+
+    def _messages(self, priority, frac):
+        cfg = GraphConfig(name="t", algorithm="cc", num_vertices=1024,
+                          avg_degree=8, generator="rmat", num_shards=4,
+                          priority=priority, enforce_fraction=frac)
+        _, _, totals = run(cfg)
+        assert totals["converged"]
+        return totals["sent"], totals["accepted"]
+
+    def test_priority_reduces_messages(self):
+        sent_all, _ = self._messages("disabled", 1.0)
+        sent_log, _ = self._messages("log", 0.1)
+        assert sent_log < sent_all
+
+    def test_log_not_worse_than_linear(self):
+        sent_lin, _ = self._messages("linear", 0.1)
+        sent_log, _ = self._messages("log", 0.1)
+        assert sent_log <= sent_lin * 1.3  # log ~ matches/beats linear
+
+    def test_all_strategies_converge_correctly(self, rmat_cc_graph):
+        cfg, g = rmat_cc_graph
+        oracle = G.cc_oracle(g.num_real_vertices, csr_edges(g))
+        for priority in ("disabled", "linear", "log"):
+            for frac in (1.0, 0.1, 0.025):
+                c = dataclasses.replace(cfg, priority=priority,
+                                        enforce_fraction=frac)
+                _, out, totals = run(c, graph=g)
+                assert totals["converged"], (priority, frac)
+                assert (out == oracle).all(), (priority, frac)
+
+
+# ======================================================================
+class TestFaultTolerance:
+    """Paper §5.5: correctness under rolling failures + bounded overhead."""
+
+    @pytest.mark.parametrize("frac", [0.5, 1.0, 2.0])
+    def test_failures_preserve_correctness(self, frac):
+        cfg = GraphConfig(name="t", algorithm="cc", num_vertices=1024,
+                          avg_degree=8, generator="rmat", num_shards=8,
+                          enforce_fraction=0.5, checkpoint_every=5,
+                          replay_log_ticks=6)
+        g = G.build_sharded_graph(cfg)
+        oracle = G.cc_oracle(g.num_real_vertices, csr_edges(g))
+        plan = FaultPlan(fail_fraction=frac, start_tick=3, every=4)
+        _, out, totals = run(cfg, graph=g, fault_plan=plan)
+        assert totals["converged"]
+        assert totals["failures"] == int(frac * 8)
+        assert (out == oracle).all()
+
+    def test_overhead_sublinear_in_failures(self):
+        """Doubling failures must NOT double runtime (paper Fig 9a)."""
+        cfg = GraphConfig(name="t", algorithm="cc", num_vertices=2048,
+                          avg_degree=8, generator="rmat", num_shards=8,
+                          enforce_fraction=0.5, checkpoint_every=5,
+                          replay_log_ticks=6)
+        g = G.build_sharded_graph(cfg)
+        _, _, t0 = run(cfg, graph=g)
+        _, _, t1 = run(cfg, graph=g, fault_plan=FaultPlan(0.5, 3, 4))
+        _, _, t2 = run(cfg, graph=g, fault_plan=FaultPlan(1.0, 3, 4))
+        r1 = t1["ticks"] / t0["ticks"]
+        r2 = t2["ticks"] / t0["ticks"]
+        assert r2 < 2 * r1  # sublinear growth
+
+    def test_fallback_beyond_log_horizon(self):
+        """Replay log too short -> boundary re-activation still converges."""
+        cfg = GraphConfig(name="t", algorithm="cc", num_vertices=512,
+                          avg_degree=6, generator="rmat", num_shards=8,
+                          enforce_fraction=0.5, checkpoint_every=50,
+                          replay_log_ticks=1)  # log never reaches checkpoint
+        g = G.build_sharded_graph(cfg)
+        oracle = G.cc_oracle(g.num_real_vertices, csr_edges(g))
+        plan = FaultPlan(fail_fraction=0.5, start_tick=4, every=5)
+        _, out, totals = run(cfg, graph=g, fault_plan=plan)
+        assert totals["converged"]
+        assert (out == oracle).all()
+
+
+# ======================================================================
+class TestBSPBaseline:
+    def test_bsp_cc_matches_and_sends_more(self, rmat_cc_graph):
+        """ASYMP's prioritized engine must beat full-frontier BSP on
+        message volume (the paper's core speed claim, in message units)."""
+        from repro.kernels.ops import bsp_connected_components
+        cfg, g = rmat_cc_graph
+        oracle = G.cc_oracle(g.num_real_vertices, csr_edges(g))
+        bsp_out, bsp_stats = bsp_connected_components(g)
+        assert (np.asarray(bsp_out) == oracle).all()
+        _, _, totals = run(dataclasses.replace(cfg, priority="log",
+                                               enforce_fraction=0.1), graph=g)
+        assert totals["sent"] < bsp_stats["messages"]
