@@ -33,7 +33,13 @@ CONFIGS: dict[str, GraphConfig] = {
     # input-scalability family (paper Fig 7)
     "asymp_cc_small": rmat(14, algorithm="cc"),
     "asymp_cc_large": rmat(18, algorithm="cc"),
+    # compressed-wire CC: labels ride int16 (lossless below the sentinel
+    # bound — see dist/exchange.effective_compression)
+    "asymp_cc_wire": rmat(14, algorithm="cc", wire_compression="int16"),
     # production-mesh structural config (dry-run only: 512 shards)
     "asymp_cc_prod": rmat(26, shards=512, algorithm="cc"),
     "asymp_sssp_prod": rmat(26, shards=512, algorithm="sssp", weighted=True),
+    # production SSSP with quantized float wire (lossy-but-safe ceil grid)
+    "asymp_sssp_wire_prod": rmat(26, shards=512, algorithm="sssp",
+                                 weighted=True, wire_compression="int16"),
 }

@@ -271,6 +271,9 @@ class GraphConfig:
     enforce_fraction: float = 0.1  # fraction of active frontier propagated/tick
     edge_budget: int = 0  # 0 -> auto (per-shard edges per tick)
     route_capacity: int = 0  # 0 -> auto (per dst-shard message slots)
+    # wire format for the exchange substrate (dist/exchange.py):
+    # "none" | "int16" | "int8" — gated down to a safe mode per program
+    wire_compression: str = "none"
     # fault tolerance
     checkpoint_every: int = 8  # ticks
     replay_log_ticks: int = 8

@@ -27,12 +27,13 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import GraphConfig
 from repro.core import programs as prog_mod
 from repro.core.graph import ShardedGraph, build_sharded_graph
+from repro.dist import exchange as ex_mod
+from repro.dist.compat import auto_axis_types, shard_map
 
 N_BUCKETS = 32
 
@@ -68,6 +69,20 @@ class EngineParams:
     enforce_fraction: float  # rho (paper: 100/10/5/2.5%)
     priority: str  # disabled | linear | log
     priority_scale: float  # normalization for bucketing
+    wire_compression: str = "none"  # effective wire mode (pre-gated)
+    wire_value_bound: int = 0  # int-payload bound gating lossless narrowing
+
+
+def wire_codec(prog, ep: EngineParams) -> ex_mod.WireCodec:
+    """The exchange substrate's codec for this engine configuration.
+
+    ``ep.wire_compression`` is already the *effective* mode (gated against
+    ``wire_value_bound`` when the params were derived), so the codec
+    re-gate is a no-op."""
+    return ex_mod.make_wire_codec(
+        num_shards=ep.num_shards, capacity=ep.route_capacity, vs=ep.vs,
+        requested=ep.wire_compression, value_kind=prog.dtype,
+        identity=prog.identity, max_int_value=ep.wire_value_bound)
 
 
 def default_params(cfg: GraphConfig, graph: ShardedGraph) -> EngineParams:
@@ -79,10 +94,14 @@ def default_params(cfg: GraphConfig, graph: ShardedGraph) -> EngineParams:
     # §Perf iter G1: 1.25x slack (was 2x) — wire and buffer traffic scale
     # with cap; overflow just retries next tick (bounded-queue semantics)
     cap = cfg.route_capacity or max(budget // P_ + budget // (4 * P_), 64)
+    prog = prog_mod.get_program(cfg)
+    wire = ex_mod.effective_compression(cfg.wire_compression, prog.dtype,
+                                        graph.num_vertices)
     return EngineParams(
         num_shards=P_, vs=vs, max_vertices_per_tick=m, degree_window=d_cap,
         route_capacity=int(cap), enforce_fraction=cfg.enforce_fraction,
-        priority=cfg.priority, priority_scale=float(graph.num_vertices))
+        priority=cfg.priority, priority_scale=float(graph.num_vertices),
+        wire_compression=wire, wire_value_bound=graph.num_vertices)
 
 
 # ======================================================================
@@ -215,6 +234,8 @@ def _phase2_receive(prog, ep: EngineParams, values, active, cursor,
 # Local (single-device, vmapped) execution
 # ======================================================================
 def make_local_tick(prog, ep: EngineParams, weighted: bool):
+    codec = wire_codec(prog, ep)
+
     def tick(state: EngineState, g: ShardGraph):
         shard_ids = jnp.arange(ep.num_shards)
 
@@ -235,9 +256,8 @@ def make_local_tick(prog, ep: EngineParams, weighted: bool):
                 state.values, state.active, state.cursor, g.row_ptr,
                 g.col_idx, w, shard_ids)
 
-        # exchange: send[p][q] -> recv[q][p]
-        rv = jnp.swapaxes(sv, 0, 1)
-        ri = jnp.swapaxes(si, 0, 1)
+        # exchange: send[p][q] -> recv[q][p] via the dist substrate
+        rv, ri = ex_mod.exchange_local(codec, sv, si)
 
         p2v = jax.vmap(lambda v, a, c, rvals, rids:
                        _phase2_receive(prog, ep, v, a, c, rvals, rids))
@@ -255,6 +275,7 @@ def make_local_tick(prog, ep: EngineParams, weighted: bool):
 # ======================================================================
 def make_dist_tick(prog, ep: EngineParams, mesh: Mesh, weighted: bool):
     axis = "workers"
+    codec = wire_codec(prog, ep)
 
     def local_fn(values, active, cursor, tick, row_ptr, col_idx, weights):
         sid = jax.lax.axis_index(axis)
@@ -262,8 +283,7 @@ def make_dist_tick(prog, ep: EngineParams, mesh: Mesh, weighted: bool):
         w = weights[0] if weighted else None
         active, cursor, sv, si, sent, fetched = _phase1_create(
             prog, ep, values, active, cursor, row_ptr[0], col_idx[0], w, sid)
-        rv = jax.lax.all_to_all(sv, axis, 0, 0, tiled=True)
-        ri = jax.lax.all_to_all(si, axis, 0, 0, tiled=True)
+        rv, ri = ex_mod.exchange_dist(codec, sv, si, axis)
         values, active, cursor, accepted = _phase2_receive(
             prog, ep, values, active, cursor, rv, ri)
         n_active = jax.lax.psum(jnp.sum(active), axis)
@@ -367,11 +387,11 @@ def lower_tick_for_mesh(cfg: GraphConfig, mesh_2d, n_workers: int):
     """Lower+compile the distributed tick on a 1-D workers view of the
     production mesh (the graph engine shards vertices over every chip)."""
     devs = np.asarray(mesh_2d.devices).reshape(-1)[:n_workers]
-    mesh = Mesh(devs, ("workers",),
-                axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = Mesh(devs, ("workers",), **auto_axis_types(1))
     cfg = dataclasses.replace(cfg, num_shards=n_workers)
     prog = prog_mod.get_program(cfg)
-    vs = -(-cfg.num_vertices // n_workers)
+    from repro.dist.sharding import vertex_partition
+    vs = vertex_partition(cfg.num_vertices, n_workers).vs
     es = max(cfg.num_edges * 2 // n_workers, 1)  # symmetrized estimate
     ep = EngineParams(
         num_shards=n_workers, vs=vs,
@@ -381,7 +401,10 @@ def lower_tick_for_mesh(cfg: GraphConfig, mesh_2d, n_workers: int):
         route_capacity=max(((cfg.edge_budget or es // 4) * 5)
                            // (4 * n_workers), 64),
         enforce_fraction=cfg.enforce_fraction, priority=cfg.priority,
-        priority_scale=float(cfg.num_vertices))
+        priority_scale=float(cfg.num_vertices),
+        wire_compression=ex_mod.effective_compression(
+            cfg.wire_compression, prog.dtype, cfg.num_vertices),
+        wire_value_bound=cfg.num_vertices)
     tick_fn = make_dist_tick(prog, ep, mesh, prog.weighted)
 
     sh = lambda spec: NamedSharding(mesh, spec)
@@ -399,7 +422,9 @@ def lower_tick_for_mesh(cfg: GraphConfig, mesh_2d, n_workers: int):
         if prog.weighted else None,
     )
     compiled = jax.jit(tick_fn, donate_argnums=(0,)).lower(state, g).compile()
+    codec = wire_codec(prog, ep)
     info = {"workers": n_workers, "vs": vs, "es": es,
             "M": ep.max_vertices_per_tick, "D": ep.degree_window,
-            "cap": ep.route_capacity}
+            "cap": ep.route_capacity, "wire": codec.compression,
+            "wire_bytes_per_tick": codec.wire_bytes_per_tick()}
     return compiled, info

@@ -120,7 +120,6 @@ class FaultManager:
         replayed = 0
         lost = [tt for tt in range(since + 1, t + 1)]
         if lost and all(tt in self.msg_log for tt in lost):
-            ids_np = values  # placate linters
             for tt in lost:
                 sv, si = self.msg_log[tt]
                 # peers re-send everything they produced for shard p at tt
@@ -128,8 +127,6 @@ class FaultManager:
                 ids_in = si[:, p, :].reshape(-1)
                 valid = ids_in >= 0
                 replayed += int(valid.sum())
-                idx = np.where(valid, ids_in, 0)
-                upd = np.minimum.reduceat  # noqa — done manually below
                 for i in np.nonzero(valid)[0]:
                     j = int(ids_in[i])
                     if vals_in[i] < values[p, j]:

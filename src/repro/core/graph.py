@@ -14,6 +14,7 @@ from typing import Optional
 import numpy as np
 
 from repro.configs.base import GraphConfig
+from repro.dist.sharding import vertex_partition
 
 
 @dataclasses.dataclass
@@ -51,7 +52,6 @@ def rmat_edges(log2_n: int, avg_degree: int, abcd, seed: int) -> np.ndarray:
     # per-bit quadrant choice for all edges at once
     src = np.zeros(m, dtype=np.int64)
     dst = np.zeros(m, dtype=np.int64)
-    p_right = np.array([b + d, 1.0])  # P(right) overall = b+d
     for bit in range(n_bits):
         r = rng.random(m)
         # quadrant probabilities with slight noise (standard RMAT smoothing)
@@ -90,10 +90,6 @@ def star_edges(n: int) -> np.ndarray:
     return np.stack([np.zeros(n - 1, np.int64), v], axis=1)
 
 
-GENERATORS = {"rmat": None, "er": None, "grid": None, "chain": None,
-              "star": None}
-
-
 def generate_edges(cfg: GraphConfig) -> np.ndarray:
     n = cfg.num_vertices
     if cfg.generator == "rmat":
@@ -124,11 +120,12 @@ def build_sharded_graph(cfg: GraphConfig,
     # drop self-loops, dedup
     edges = edges[edges[:, 0] != edges[:, 1]]
     edges = np.unique(edges, axis=0)
-    vs = -(-n // P)
-    n_pad = vs * P
+    part = vertex_partition(n, P)  # the engine's shard rule (dist/sharding)
+    vs = part.vs
+    n_pad = part.padded_vertices
 
     src, dst = edges[:, 0], edges[:, 1]
-    shard = src // vs
+    shard = part.shard_of(src)
     order = np.lexsort((dst, src))
     src, dst, shard = src[order], dst[order], shard[order]
 

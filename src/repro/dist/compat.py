@@ -1,0 +1,52 @@
+"""Version-tolerant jax API surface.
+
+The repo targets jax 0.4.37 (the baked-in toolchain) but should keep
+working on newer releases, where two things moved:
+
+  * ``shard_map`` graduated from ``jax.experimental.shard_map`` to
+    ``jax.shard_map``;
+  * its replication-check kwarg was renamed ``check_rep`` -> ``check_vma``.
+
+Everything in-repo calls :func:`shard_map` from here with the *new*
+spelling (``check_vma=``); this wrapper translates for old jax.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable, Optional
+
+import jax
+
+try:  # jax >= 0.6: top-level export, kwarg is check_vma
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4.x/0.5.x: experimental home, kwarg is check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = inspect.signature(_shard_map).parameters
+_CHECK_KW = "check_vma" if "check_vma" in _PARAMS else (
+    "check_rep" if "check_rep" in _PARAMS else None)
+
+
+def shard_map(f: Callable, *, mesh: Any, in_specs: Any, out_specs: Any,
+              check_vma: Optional[bool] = None, **kwargs) -> Callable:
+    """``jax.shard_map`` with the 0.6-era signature on every jax version."""
+    if check_vma is not None and _CHECK_KW is not None:
+        kwargs[_CHECK_KW] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+
+
+def axis_index(axis_name: str):
+    return jax.lax.axis_index(axis_name)
+
+
+def auto_axis_types(n_axes: int):
+    """``axis_types=(AxisType.Auto,) * n`` where supported, else None.
+
+    0.4.x meshes have no axis_types concept; callers splat the returned
+    dict into ``Mesh(...)`` / ``jax.make_mesh(...)`` keyword arguments.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}

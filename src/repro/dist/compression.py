@@ -1,0 +1,152 @@
+"""Message/gradient compression: quantized buffers + compressed psum.
+
+Two consumers, one toolbox:
+
+  * the **trainer's gradient exchange** — :func:`compressed_psum` (int8
+    error-feedback all-reduce inside a ``shard_map``) and
+    :func:`ef_compress_tree` (the same quantize/dequantize round-trip with
+    a carried residual, used by the microbatch accumulation loop where the
+    per-microbatch reduction would go on the wire);
+  * the **engine's message buffers** — ``repro.dist.exchange`` encodes
+    send buffers with :func:`quantize_rows` / :func:`dequantize_rows`
+    (per-destination-row scales, *ceil* rounding so a min-semiring value
+    is never under-estimated — safety of asynchronous relaxation survives
+    the lossy round-trip).
+
+All functions are pure jnp and jit/shard_map-traceable.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_EPS = 1e-30
+
+
+# ======================================================================
+# Whole-tensor quantization (gradients, checkpoint deltas)
+# ======================================================================
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x -> (int8 codes, f32 scalar scale); symmetric 127-level grid."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), _EPS).astype(jnp.float32)
+    q = jnp.round(x.astype(jnp.float32) / scale * 127.0)
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray, shape, dtype
+                    ) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * (scale / 127.0)).reshape(shape
+                                                             ).astype(dtype)
+
+
+def ef_compress(x: jnp.ndarray, error: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Error-feedback round-trip: returns (decoded, new residual).
+
+    ``decoded`` is what the wire would deliver; the residual (what
+    quantization dropped) is returned for the caller to add back into the
+    *next* round's input — the standard EF-SGD trick that keeps compressed
+    reductions unbiased over time.
+    """
+    if error is not None:
+        x = x + error
+    q, s = quantize_int8(x)
+    decoded = dequantize_int8(q, s, x.shape, x.dtype)
+    return decoded, (x - decoded).astype(x.dtype)
+
+
+def ef_compress_tree(grads, errors):
+    """Tree-mapped :func:`ef_compress`; ``errors=None`` starts at zero."""
+    g_flat, treedef = jax.tree.flatten(grads)
+    if errors is None:
+        e_flat = [jnp.zeros_like(g) for g in g_flat]
+    else:
+        e_flat = jax.tree.flatten(errors)[0]
+    pairs = [ef_compress(g, e) for g, e in zip(g_flat, e_flat)]
+    decoded = jax.tree.unflatten(treedef, [p[0] for p in pairs])
+    new_err = jax.tree.unflatten(treedef, [p[1] for p in pairs])
+    return decoded, new_err
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str,
+                    error: Optional[jnp.ndarray] = None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """int8 error-feedback mean-all-reduce over ``axis_name``.
+
+    Inside ``shard_map``: every participant quantizes against a shared
+    (pmax) scale, int32-accumulates the codes, and dequantizes the sum —
+    wire traffic is 1 byte/element + one f32 scale.  Returns
+    (mean, residual); callers carry the residual into the next call.
+    """
+    if error is not None:
+        x = x + error
+    scale = jax.lax.pmax(jnp.max(jnp.abs(x)), axis_name)
+    scale = jnp.maximum(scale, _EPS).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale * 127.0),
+                 -127, 127).astype(jnp.int8)
+    local = q.astype(jnp.float32) * (scale / 127.0)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name).astype(jnp.float32)
+    out = (total * (scale / 127.0) / n).astype(x.dtype)
+    return out, (x - local).astype(x.dtype)
+
+
+# ======================================================================
+# Row-quantized buffers (engine wire format for float payloads)
+# ======================================================================
+def quantize_rows(vals: jnp.ndarray, bits: int
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """f32 [..., cap] -> (intN codes, f32 [..., 1] per-row scale).
+
+    Non-finite entries (the min-semiring identity, +inf) encode as the
+    sentinel ``qmax + 1``.  Finite magnitudes use *ceil* rounding: the
+    decoded value is >= the original, so an asynchronously relaxed minimum
+    can converge slower but never below the true fixpoint.
+    """
+    assert bits in (8, 16), bits
+    qmax = (1 << (bits - 1)) - 2  # 126 / 32766; qmax+1 is the inf sentinel
+    dtype = jnp.int8 if bits == 8 else jnp.int16
+    finite = jnp.isfinite(vals)
+    mag = jnp.where(finite, jnp.abs(vals), 0.0)
+    scale = jnp.maximum(jnp.max(mag, axis=-1, keepdims=True), _EPS
+                        ).astype(jnp.float32)
+    # ceil in the *signed* domain: negatives round toward zero, so the
+    # decoded value is >= the original for every sign (min-semiring safety)
+    q = jnp.ceil(vals / scale * qmax)
+    q = jnp.where(finite, jnp.clip(q, -qmax, qmax), qmax + 1)
+    return q.astype(dtype), scale
+
+
+def dequantize_rows(q: jnp.ndarray, scale: jnp.ndarray, bits: int,
+                    identity, dtype) -> jnp.ndarray:
+    qmax = (1 << (bits - 1)) - 2
+    v = q.astype(jnp.float32) * (scale / qmax)
+    return jnp.where(q == qmax + 1, jnp.asarray(identity, jnp.float32), v
+                     ).astype(dtype)
+
+
+# ======================================================================
+# Lossless integer narrowing (engine wire format for int payloads)
+# ======================================================================
+def narrow_int(vals: jnp.ndarray, bits: int, identity) -> jnp.ndarray:
+    """int32 [...,] -> intN with the top code reserved for ``identity``.
+
+    Lossless iff every real value fits below the sentinel (callers gate on
+    that bound — see ``exchange.effective_compression``); out-of-range
+    values saturate to the sentinel, which decodes back to the identity
+    (a *weaker* message: safe for min-semiring programs, never wrong).
+    """
+    assert bits in (8, 16), bits
+    sentinel = (1 << (bits - 1)) - 1  # 127 / 32767
+    dtype = jnp.int8 if bits == 8 else jnp.int16
+    del identity  # encode side only needs the bound
+    return jnp.where(vals >= sentinel, sentinel, vals).astype(dtype)
+
+
+def widen_int(q: jnp.ndarray, bits: int, identity, dtype) -> jnp.ndarray:
+    sentinel = (1 << (bits - 1)) - 1
+    wide = q.astype(jnp.int32)
+    return jnp.where(wide == sentinel, jnp.asarray(identity, jnp.int32), wide
+                     ).astype(dtype)

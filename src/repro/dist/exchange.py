@@ -1,0 +1,162 @@
+"""The exchange substrate: one routing API over the engine's two transports.
+
+The ASYMP engine produces, per shard, a pair of send buffers
+``(values [Pn, cap], ids [Pn, cap])`` — row ``q`` holds the messages bound
+for shard ``q``, ``ids`` are destination-local vertex slots (-1 = empty).
+Delivery is a shard transpose: receiver ``q`` ends with row ``p`` from
+every sender ``p``.  Two transports implement it:
+
+  * **local**  — all shards live in one device array ``[P, Pn, cap]``;
+    the transpose is ``swapaxes(0, 1)`` (tests, benchmarks, fault studies);
+  * **dist**   — one shard per device under ``shard_map``; the transpose
+    is ``lax.all_to_all`` over the ``workers`` mesh axis (production).
+
+Both run the *same* wire codec so their results are bit-identical:
+
+  * ``none``  — int32 values + int32 ids (the raw baseline);
+  * ``int16``/``int8`` — integer payloads (CC/BFS labels) narrow
+    losslessly when the value bound fits (sentinel = identity), float
+    payloads (SSSP distances) quantize per destination row with ceil
+    rounding (see ``compression.quantize_rows``) — self-stabilizing
+    min-semiring programs tolerate the lossy round-trip because decoded
+    values never under-estimate.  Ids narrow to int16 whenever the shard
+    width fits.
+
+``effective_compression`` is the gate: a requested mode that cannot be
+carried safely (e.g. int16 labels on a 10^6-vertex graph) falls back to
+``none`` rather than produce wrong fixpoints.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import compression as C
+
+_INT_SENTINEL = {8: 127, 16: 32767}
+
+
+def effective_compression(requested: str, value_kind: str,
+                          max_int_value: int = 0) -> str:
+    """Gate a requested wire mode against what the payload can carry.
+
+    int payloads ("int32": CC labels, BFS hops) only narrow when every
+    real value stays below the sentinel code — otherwise distinct labels
+    would alias and the fixpoint would change, so we fall back to "none".
+    float payloads always admit quantization (lossy but safe, see module
+    docstring).
+    """
+    if requested in (None, "", "none"):
+        return "none"
+    assert requested in ("int8", "int16"), requested
+    if value_kind == "float32":
+        return requested
+    bits = 8 if requested == "int8" else 16
+    if max_int_value < _INT_SENTINEL[bits]:
+        return requested
+    if max_int_value < _INT_SENTINEL[16]:
+        return "int16"  # requested int8 can't hold the labels; int16 can
+    return "none"
+
+
+@dataclasses.dataclass(frozen=True)
+class WireCodec:
+    """Static description of one exchange's wire format (hashable; closed
+    over by jit alongside EngineParams)."""
+    num_shards: int
+    capacity: int
+    compression: str  # effective: "none" | "int16" | "int8"
+    value_kind: str  # "int32" | "float32"
+    identity: float  # decode target for the sentinel code
+    compress_ids: bool  # ids as int16 (requires vs <= 32766)
+
+    @property
+    def bits(self) -> int:
+        return 8 if self.compression == "int8" else 16
+
+    # ------------------------------------------------------------------
+    def encode(self, vals: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+        if self.compression == "none":
+            return vals, None
+        if self.value_kind == "int32":
+            return C.narrow_int(vals, self.bits, self.identity), None
+        return C.quantize_rows(vals, self.bits)
+
+    def decode(self, payload: jnp.ndarray,
+               scales: Optional[jnp.ndarray]) -> jnp.ndarray:
+        if self.compression == "none":
+            return payload
+        if self.value_kind == "int32":
+            return C.widen_int(payload, self.bits, self.identity, jnp.int32)
+        return C.dequantize_rows(payload, scales, self.bits, self.identity,
+                                 jnp.float32)
+
+    def encode_ids(self, ids: jnp.ndarray) -> jnp.ndarray:
+        return ids.astype(jnp.int16) if self.compress_ids else ids
+
+    def decode_ids(self, ids: jnp.ndarray) -> jnp.ndarray:
+        return ids.astype(jnp.int32) if self.compress_ids else ids
+
+    # ------------------------------------------------------------------
+    def wire_bytes_per_tick(self) -> int:
+        """Bytes crossing the wire per tick, all shard pairs (stats only —
+        the scale sidecar is counted, padding/empty slots are, too, since
+        fixed-capacity buffers really do ship their full extent)."""
+        slots = self.num_shards * self.num_shards * self.capacity
+        if self.compression == "none":
+            val_b, id_b, scale_b = 4, 4, 0
+        else:
+            val_b = 1 if self.compression == "int8" else 2
+            id_b = 2 if self.compress_ids else 4
+            scale_b = (4 if self.value_kind == "float32" else 0)
+        per_pair_scale = self.num_shards * self.num_shards * scale_b
+        return slots * (val_b + id_b) + per_pair_scale
+
+
+def make_wire_codec(num_shards: int, capacity: int, vs: int,
+                    requested: str, value_kind: str, identity,
+                    max_int_value: int = 0) -> WireCodec:
+    mode = effective_compression(requested, value_kind, max_int_value)
+    return WireCodec(
+        num_shards=num_shards, capacity=capacity, compression=mode,
+        value_kind=value_kind, identity=float(identity)
+        if value_kind == "float32" else int(identity),
+        compress_ids=(mode != "none" and vs <= _INT_SENTINEL[16] - 1))
+
+
+# ======================================================================
+# Transports
+# ======================================================================
+def exchange_local(codec: WireCodec, send_vals: jnp.ndarray,
+                   send_ids: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """[P, Pn, cap] send buffers -> [Pn, P, cap] receive buffers.
+
+    The encode/decode round-trip runs even though no wire is crossed, so
+    local and distributed executions of the same codec are bit-identical
+    (this is what lets single-device tests certify the production path).
+    """
+    enc_v, scales = codec.encode(send_vals)
+    enc_i = codec.encode_ids(send_ids)
+    rv = jnp.swapaxes(enc_v, 0, 1)
+    ri = jnp.swapaxes(enc_i, 0, 1)
+    rs = jnp.swapaxes(scales, 0, 1) if scales is not None else None
+    return codec.decode(rv, rs), codec.decode_ids(ri)
+
+
+def exchange_dist(codec: WireCodec, send_vals: jnp.ndarray,
+                  send_ids: jnp.ndarray, axis_name: str
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-shard [Pn, cap] send buffers -> [Pn, cap] receive buffers via
+    ``all_to_all`` over ``axis_name`` (row q of the result is sender q's
+    buffer for this shard).  Must run inside ``shard_map``."""
+    a2a = lambda x: jax.lax.all_to_all(x, axis_name, 0, 0, tiled=True)
+    enc_v, scales = codec.encode(send_vals)
+    rv = a2a(enc_v)
+    ri = a2a(codec.encode_ids(send_ids))
+    rs = a2a(scales) if scales is not None else None
+    return codec.decode(rv, rs), codec.decode_ids(ri)

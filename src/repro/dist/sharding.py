@@ -1,0 +1,196 @@
+"""Sharding rules: disjoint, deterministic, covering shards for both halves
+of the system.
+
+Two partitioning problems share one module because they share one contract
+(every element owned by exactly one shard, resolution is a pure function of
+the inputs, fall back to replication/padding when sizes don't divide):
+
+  * **parameters/activations** — :class:`ShardingRules` maps *logical* axis
+    names ("batch", "mlp", "kv_heads", ...) to mesh axes, enforcing
+    (a) divisibility: a dimension is only sharded if the mesh-axis product
+    divides it, and (b) single use: a mesh axis consumed by an earlier
+    dimension of the same tensor is unavailable to later ones.  Fallbacks
+    are logged (tag, logical axis, dim, chosen, reason) so the dry-run can
+    report every replication decision.
+  * **vertices** — :func:`vertex_partition` is the single source of truth
+    for the graph engine's contiguous-range partition: vertex ``v`` lives
+    on shard ``v // vs`` at local slot ``v % vs``, with the last shard
+    padded (the divisibility fallback for ``n % P != 0``).
+
+A tiny context (:func:`use_mesh_rules` / :func:`current_mesh` /
+:func:`shard`) lets model code state *logical* constraints and stay
+mesh-agnostic: outside a mesh context ``shard`` is the identity, so tests
+and single-device examples run the same code the 256-chip dry-run lowers.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Any, NamedTuple, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# Default logical-axis -> candidate mesh-axes table.  Each logical name maps
+# to a *preference list* of mesh-axis tuples; the first candidate that is
+# present in the mesh, unused by earlier dims, and divides the dimension
+# wins.  ``((),)`` means "always replicate".
+DEFAULT_RULES: dict[str, tuple[tuple[str, ...], ...]] = {
+    # data-parallel family
+    "batch": (("pod", "data"),),
+    "fsdp": (("pod", "data"),),        # ZeRO-3 param/optimizer sharding
+    # model-parallel family (tensor axes)
+    "seq": (("model",),),              # Megatron-SP activations
+    "vocab": (("model",),),
+    "mlp": (("model",),),
+    "heads": (("model",),),
+    "act_heads": (("model",),),
+    "q_proj": (("model",),),
+    "kv_proj": (("model",),),
+    "kv_heads": (("model",),),
+    "kv_seq": (("model",),),
+    "experts": (("model",),),
+    "ssm_heads": (("model",),),
+    "ssm_inner": (("model",),),
+    # always-replicated leaves
+    "embed": ((),),
+    "lora": ((),),
+}
+
+
+class ShardingRules:
+    """Logical-axis resolver with divisibility fallback and fallback log."""
+
+    def __init__(self,
+                 rules: Optional[dict[str, tuple[tuple[str, ...], ...]]] = None,
+                 log: Optional[list] = None):
+        self.rules = dict(DEFAULT_RULES)
+        if rules:
+            self.rules.update(rules)
+        # (tag, logical_axis, dim_size, chosen, reason) tuples
+        self.log: list[tuple] = log if log is not None else []
+
+    def override(self, **overrides) -> "ShardingRules":
+        """New rules with per-logical-axis candidate lists replaced.
+
+        Values are candidate lists (e.g. ``((),)`` to force replication).
+        The fallback log is shared so callers can read one stream.
+        """
+        merged = dict(self.rules)
+        merged.update(overrides)
+        return ShardingRules(rules=merged, log=self.log)
+
+    # ------------------------------------------------------------------
+    def resolve(self, mesh, axes: Sequence[Optional[str]],
+                shape: Sequence[int], tag: str = "") -> P:
+        """(logical axes, shape) -> PartitionSpec on ``mesh``.
+
+        Guarantees: each mesh axis appears at most once in the result, and
+        a dimension is only sharded when the mesh-axis product divides it.
+        """
+        assert len(axes) == len(shape), (tag, axes, shape)
+        used: set[str] = set()
+        entries: list = []
+        for name, dim in zip(axes, shape):
+            chosen: tuple[str, ...] = ()
+            reason = ""
+            if name:
+                candidates = self.rules.get(name)
+                if candidates is None:
+                    reason = f"unknown logical axis {name!r}"
+                    candidates = ()
+                for cand in candidates:
+                    if cand == ():  # replicate *by rule* — not a fallback
+                        reason = ""
+                        break
+                    avail = tuple(a for a in cand
+                                  if a in mesh.shape and a not in used)
+                    if not avail:
+                        reason = reason or f"{cand} unavailable/used"
+                        continue
+                    size = math.prod(mesh.shape[a] for a in avail)
+                    if dim % size != 0:
+                        reason = f"{dim} %% {avail}={size}"
+                        continue
+                    chosen = avail
+                    reason = ""
+                    break
+                if not chosen and reason:
+                    self.log.append((tag, name, dim, (), reason))
+            if not chosen:
+                entries.append(None)
+            else:
+                entries.append(chosen[0] if len(chosen) == 1 else chosen)
+                used.update(chosen)
+        return P(*entries)
+
+
+# ======================================================================
+# Mesh + rules context (thread of execution scoped, nestable)
+# ======================================================================
+_CONTEXT: list[tuple[Any, ShardingRules]] = []
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh, rules: Optional[ShardingRules] = None):
+    """Activate (mesh, rules) for ``shard``/``current_mesh`` in this block."""
+    _CONTEXT.append((mesh, rules or ShardingRules()))
+    try:
+        yield
+    finally:
+        _CONTEXT.pop()
+
+
+def current_mesh():
+    return _CONTEXT[-1][0] if _CONTEXT else None
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return _CONTEXT[-1][1] if _CONTEXT else None
+
+
+def shard(x, *axes: Optional[str], tag: str = ""):
+    """Constrain ``x``'s sharding by logical axis names (identity w/o mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    rules = current_rules() or ShardingRules()
+    spec = rules.resolve(mesh, axes, x.shape, tag)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ======================================================================
+# Vertex partition (the graph engine's shard rule)
+# ======================================================================
+class VertexPartition(NamedTuple):
+    """Contiguous-range partition of ``num_vertices`` over ``num_shards``.
+
+    Disjoint and covering by construction; deterministic (a pure function
+    of the two sizes); padded tail = divisibility fallback.
+    """
+    num_shards: int
+    vs: int  # vertices per shard (ceil division)
+    num_vertices: int  # real (unpadded) vertex count
+
+    @property
+    def padded_vertices(self) -> int:
+        return self.num_shards * self.vs
+
+    def shard_of(self, vertex_ids):
+        return vertex_ids // self.vs
+
+    def local_of(self, vertex_ids):
+        return vertex_ids % self.vs
+
+    def ranges(self) -> np.ndarray:
+        """[P, 2] (lo, hi) global-id range per shard (hi exclusive, real)."""
+        lo = np.arange(self.num_shards, dtype=np.int64) * self.vs
+        hi = np.minimum(lo + self.vs, self.num_vertices)
+        return np.stack([lo, np.maximum(hi, lo)], axis=1)
+
+
+def vertex_partition(num_vertices: int, num_shards: int) -> VertexPartition:
+    assert num_vertices > 0 and num_shards > 0, (num_vertices, num_shards)
+    vs = -(-num_vertices // num_shards)
+    return VertexPartition(num_shards, vs, num_vertices)

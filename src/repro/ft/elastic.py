@@ -19,18 +19,27 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.engine import EngineState
+from repro.dist.sharding import vertex_partition
 
 
 def repartition_state(state: EngineState, old_graph, new_graph) -> EngineState:
-    """Re-split engine state from old_graph's (P, vs) onto new_graph's."""
+    """Re-split engine state from old_graph's (P, vs) onto new_graph's.
+
+    Both layouts come from the same ``dist.sharding.vertex_partition`` rule
+    (contiguous global-id ranges), so the move is a flatten in global vertex
+    order followed by a re-split under the new partition."""
     import jax.numpy as jnp
 
+    old_p = vertex_partition(old_graph.num_real_vertices, old_graph.num_shards)
+    new_p = vertex_partition(new_graph.num_real_vertices, new_graph.num_shards)
+    assert (old_p.vs, new_p.vs) == (old_graph.vs, new_graph.vs), \
+        "graph layout diverged from the dist.sharding partition rule"
+
     def resplit(arr, fill):
-        flat = np.asarray(arr).reshape(-1)[: old_graph.num_real_vertices]
-        n_new = new_graph.num_shards * new_graph.vs
-        out = np.full((n_new,), fill, dtype=flat.dtype)
+        flat = np.asarray(arr).reshape(-1)[: old_p.num_vertices]
+        out = np.full((new_p.padded_vertices,), fill, dtype=flat.dtype)
         out[: flat.shape[0]] = flat
-        return jnp.asarray(out.reshape(new_graph.num_shards, new_graph.vs))
+        return jnp.asarray(out.reshape(new_p.num_shards, new_p.vs))
 
     return EngineState(
         values=resplit(state.values, np.asarray(state.values).max()),

@@ -11,14 +11,15 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.dist.compat import auto_axis_types
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """The target v5e topology: one pod = 16x16 (data, model); two pods add
     a leading "pod" axis used as an outer data-parallel dimension."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **auto_axis_types(len(axes)))
 
 
 def make_local_mesh(model: int = 1) -> Mesh:
@@ -27,7 +28,7 @@ def make_local_mesh(model: int = 1) -> Mesh:
     n = devs.size
     assert n % model == 0, (n, model)
     return Mesh(devs.reshape(n // model, model), ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+                **auto_axis_types(2))
 
 
 def make_worker_mesh(num_workers: int | None = None) -> Mesh:

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist import compression as comp_mod
 from repro.dist.sharding import ShardingRules, use_mesh_rules
 from repro.models import encdec as encdec_mod
 from repro.models import transformer as transformer_mod
@@ -59,10 +60,25 @@ def init_state(cfg: ModelConfig, key: jax.Array):
 
 def make_train_step(cfg: ModelConfig, *, lr: float = 3e-4,
                     microbatches: int = 1, clip_norm: float = 1.0,
-                    schedule: Optional[Callable] = None) -> Callable:
+                    schedule: Optional[Callable] = None,
+                    grad_compression: Optional[str] = None) -> Callable:
+    """``grad_compression="int8"`` routes each microbatch's gradients
+    through the dist substrate's error-feedback int8 round-trip — the
+    wire format the cross-pod data-parallel reduction ships (see
+    ``dist/compression.py``).  The residual is carried across the
+    microbatches *within* a step (so the accumulated gradient is
+    error-compensated intra-step) and dropped at the step boundary —
+    carrying it across steps would need a residual slot in TrainState;
+    see ROADMAP open items."""
     opt = opt_mod.get_optimizer(cfg.optimizer)
     loss_fn = loss_fn_for(cfg)
     lr_fn = schedule or (lambda step: jnp.asarray(lr, jnp.float32))
+    assert grad_compression in (None, "int8"), grad_compression
+    # EF needs somewhere to carry the residual; with a single microbatch
+    # there is no in-step accumulation loop to carry it through, and a
+    # silently-biased quantizer is worse than an error
+    assert grad_compression is None or microbatches > 1, \
+        "grad_compression requires microbatches > 1 (EF residual carrier)"
 
     def grads_of(params, batch):
         (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
@@ -73,18 +89,24 @@ def make_train_step(cfg: ModelConfig, *, lr: float = 3e-4,
         params = state.params
         if microbatches > 1:
             def micro(carry, mb):
-                g_acc, l_acc = carry
+                g_acc, l_acc, err = carry
                 loss, _, grads = grads_of(params, mb)
+                grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+                if grad_compression:
+                    grads, err = comp_mod.ef_compress_tree(grads, err)
                 g_acc = jax.tree.map(
-                    lambda a, g: a + g.astype(jnp.float32) / microbatches,
-                    g_acc, grads)
-                return (g_acc, l_acc + loss / microbatches), None
+                    lambda a, g: a + g / microbatches, g_acc, grads)
+                return (g_acc, l_acc + loss / microbatches, err), None
 
             mbs = jax.tree.map(
                 lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
                                     + x.shape[1:]), batch)
             g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            (grads, loss), _ = jax.lax.scan(micro, (g0, jnp.zeros(())), mbs)
+            # the residual carrier costs a param-sized buffer; only pay
+            # for it when the compressed path actually uses it
+            e0 = jax.tree.map(jnp.zeros_like, g0) if grad_compression else ()
+            (grads, loss, _), _ = jax.lax.scan(
+                micro, (g0, jnp.zeros(()), e0), mbs)
             metrics = {"loss": loss}
         else:
             loss, metrics, grads = grads_of(params, batch)

@@ -1,0 +1,101 @@
+"""Minimal, dependency-free stand-in for the slice of hypothesis the suite
+uses, so property tests run everywhere (the CI container pins hypothesis,
+but dev boxes and hermetic build sandboxes often lack it).
+
+Semantics: ``@given`` replays the wrapped test over a deterministic seed
+grid (one ``numpy`` Generator per example index), honoring
+``@settings(max_examples=...)``.  No shrinking, no database, no deadline —
+a failing example prints its drawn values via the assertion traceback.
+
+Usage (the import-fallback idiom the test modules use):
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _propshim import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+from types import SimpleNamespace
+from typing import Any, Callable
+
+import numpy as np
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    """A strategy is anything with ``example(rng) -> value``."""
+
+    def __init__(self, draw_fn: Callable[[np.random.Generator], Any]):
+        self._draw = draw_fn
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def sampled_from(options) -> _Strategy:
+    options = list(options)
+    return _Strategy(lambda rng: options[int(rng.integers(len(options)))])
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.integers(2)))
+
+
+def composite(fn: Callable) -> Callable[..., _Strategy]:
+    """``@st.composite`` — the wrapped fn receives ``draw`` first."""
+
+    def build(*args, **kwargs) -> _Strategy:
+        def draw_fn(rng: np.random.Generator):
+            draw = lambda strat: strat.example(rng)
+            return fn(draw, *args, **kwargs)
+        return _Strategy(draw_fn)
+
+    return build
+
+
+def given(*strategies: _Strategy) -> Callable:
+    def deco(fn: Callable) -> Callable:
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                rng = np.random.default_rng(7919 * i + 11)
+                drawn = [s.example(rng) for s in strategies]
+                fn(*args, *drawn, **kwargs)
+        wrapper._max_examples = _DEFAULT_MAX_EXAMPLES
+        wrapper._is_propshim = True
+        # hide the drawn parameters from pytest's fixture resolution: the
+        # wrapper itself takes none (like hypothesis's @given), but
+        # functools.wraps leaks the original signature via __wrapped__
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, **_ignored) -> Callable:
+    """Decorator-factory; only ``max_examples`` is honored (``deadline``
+    etc. are accepted and ignored)."""
+
+    def deco(fn: Callable) -> Callable:
+        if hasattr(fn, "_max_examples"):
+            fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+strategies = SimpleNamespace(
+    integers=integers, sampled_from=sampled_from, floats=floats,
+    booleans=booleans, composite=composite)

@@ -3,7 +3,11 @@ import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic envs: deterministic seed-grid fallback
+    from _propshim import given, settings, strategies as st
 
 from repro.configs.base import GraphConfig
 from repro.core import engine as E

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic envs: deterministic seed-grid fallback
+    from _propshim import given, settings, strategies as st
 
 from repro.kernels import ref as R
 from repro.kernels.ops import build_pulled_graph, frontier_pull_step

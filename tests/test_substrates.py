@@ -135,7 +135,7 @@ class TestCompression:
         """int8 EF all-reduce ~= exact mean; error feedback is carried."""
         devs = jax.devices()
         from jax.sharding import Mesh, PartitionSpec as P
-        from jax import shard_map
+        from repro.dist.compat import shard_map
         mesh = Mesh(np.array(devs[:1]), ("d",))
         g = jax.random.normal(jax.random.PRNGKey(1), (512,)) * 0.1
 
@@ -150,6 +150,21 @@ class TestCompression:
         # error feedback must equal the quantization residual
         np.testing.assert_allclose(np.asarray(g - out), np.asarray(err),
                                    atol=1e-6)
+
+    def test_trainer_int8_grad_exchange_still_learns(self):
+        """The trainer's compressed gradient exchange (EF int8 round-trip
+        per microbatch, residual carried) must not stop optimization."""
+        cfg = get_config("qwen3-4b").reduced()
+        state, _ = TR.init_state(cfg, jax.random.PRNGKey(0))
+        step = jax.jit(TR.make_train_step(cfg, lr=1e-3, microbatches=2,
+                                          grad_compression="int8"))
+        pipe = DataPipeline(SyntheticSource(cfg.vocab_size, 32), 8)
+        losses = []
+        for _ in range(5):
+            b = {k: jnp.asarray(v) for k, v in pipe.next_batch().items()}
+            state, m = step(state, b)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0]
 
 
 class TestShardingRules:
@@ -174,6 +189,117 @@ class TestShardingRules:
         assert spec == js.PartitionSpec("model", None)
 
 
+class TestVertexPartition:
+    def test_disjoint_deterministic_covering(self):
+        from repro.dist.sharding import vertex_partition
+        for n, p in [(1000, 8), (512, 4), (7, 3), (16, 16), (1, 1)]:
+            part = vertex_partition(n, p)
+            assert part == vertex_partition(n, p)  # deterministic
+            ids = np.arange(n)
+            owners = part.shard_of(ids)
+            locals_ = part.local_of(ids)
+            # covering + disjoint: every global id maps to exactly one
+            # (shard, slot) and the flattened layout is the identity
+            flat = owners * part.vs + locals_
+            np.testing.assert_array_equal(flat, ids)
+            assert owners.max() < part.num_shards
+            assert part.padded_vertices >= n
+            lo_hi = part.ranges()
+            assert lo_hi[0, 0] == 0 and lo_hi[-1, 1] == n
+
+    def test_matches_graph_builder_layout(self):
+        from repro.configs.base import GraphConfig
+        from repro.core.graph import build_sharded_graph
+        from repro.dist.sharding import vertex_partition
+        cfg = GraphConfig(name="t", algorithm="cc", num_vertices=100,
+                          avg_degree=4, generator="er", num_shards=3)
+        g = build_sharded_graph(cfg)
+        part = vertex_partition(cfg.num_vertices, cfg.num_shards)
+        assert (g.vs, g.num_vertices) == (part.vs, part.padded_vertices)
+
+
+class TestExchange:
+    """The unified exchange substrate: local/dist transports x wire codecs."""
+
+    def test_compressed_mode_identical_cc_labels(self, rmat_cc_graph):
+        """Acceptance: int16 wire vs raw wire on the RMAT test graph must
+        produce bit-identical CC labels (the narrowing is lossless below
+        the sentinel bound) while shipping ~2x fewer wire bytes."""
+        import dataclasses
+        from repro.core import engine as E, graph as G, merger, programs as PR
+        from conftest import csr_edges
+
+        cfg, g = rmat_cc_graph
+        oracle = G.cc_oracle(g.num_real_vertices, csr_edges(g))
+        outs, codecs = {}, {}
+        for mode in ("none", "int16"):
+            cfg_m = dataclasses.replace(cfg, wire_compression=mode)
+            ep = E.default_params(cfg_m, g)
+            assert ep.wire_compression == mode  # 1024 labels fit int16
+            codecs[mode] = E.wire_codec(PR.get_program(cfg_m), ep)
+            state, totals = E.run_to_convergence(cfg_m, graph=g)
+            assert totals["converged"]
+            outs[mode] = merger.extract(state, g, PR.get_program(cfg_m))
+        assert (outs["none"] == oracle).all()
+        assert (outs["int16"] == outs["none"]).all()
+        raw_b = codecs["none"].wire_bytes_per_tick()
+        comp_b = codecs["int16"].wire_bytes_per_tick()
+        assert comp_b * 2 <= raw_b
+
+    def test_unsafe_int_narrowing_gated_to_none(self):
+        from repro.dist import exchange as X
+        # 10^6 CC labels cannot ride int16 -> fall back to raw
+        assert X.effective_compression("int16", "int32", 10 ** 6) == "none"
+        # int8 request on a 10k-label graph degrades to int16, not none
+        assert X.effective_compression("int8", "int32", 10 ** 4) == "int16"
+        # float payloads always admit quantization (lossy-but-safe)
+        assert X.effective_compression("int8", "float32") == "int8"
+        assert X.effective_compression("none", "int32", 5) == "none"
+
+    def test_float_wire_never_underestimates(self):
+        """Ceil-rounded quantization: decoded >= original (min-semiring
+        safety), inf (identity) round-trips exactly."""
+        from repro.dist import exchange as X
+        key = jax.random.PRNGKey(2)
+        vals = jax.random.uniform(key, (3, 5, 16), jnp.float32, 0.0, 50.0)
+        vals = vals.at[:, :, -3:].set(jnp.inf)  # empty slots
+        ids = jnp.where(jnp.isfinite(vals), 1, -1).astype(jnp.int32)
+        for mode in ("int8", "int16"):
+            codec = X.make_wire_codec(num_shards=5, capacity=16, vs=100,
+                                      requested=mode, value_kind="float32",
+                                      identity=float("inf"))
+            rv, ri = X.exchange_local(codec, vals, ids)
+            ref = jnp.swapaxes(vals, 0, 1)
+            assert bool(jnp.all(jnp.isinf(rv) == jnp.isinf(ref)))
+            assert bool(jnp.all(rv >= ref - 1e-6))
+            # error is bounded by one grid step of the per-row scale
+            qmax = 126 if mode == "int8" else 32766
+            err = jnp.where(jnp.isfinite(ref), rv - ref, 0.0)
+            scale = jnp.max(jnp.where(jnp.isfinite(ref), ref, 0.0),
+                            axis=-1, keepdims=True)
+            assert float(jnp.max(err - scale / qmax)) <= 1e-5, mode
+
+    def test_local_and_dist_transports_agree(self):
+        """Same codec, both transports, bit-identical delivery."""
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.dist import exchange as X
+        from repro.dist.compat import shard_map
+        codec = X.make_wire_codec(num_shards=1, capacity=8, vs=64,
+                                  requested="int16", value_kind="int32",
+                                  identity=2 ** 31 - 1, max_int_value=64)
+        sv = jnp.full((1, 1, 8), 2 ** 31 - 1, jnp.int32
+                      ).at[0, 0, :3].set(jnp.asarray([5, 63, 0]))
+        si = jnp.full((1, 1, 8), -1, jnp.int32).at[0, 0, :3].set(
+            jnp.asarray([1, 2, 3]))
+        lv, li = X.exchange_local(codec, sv, si)
+        mesh = Mesh(np.array(jax.devices()[:1]), ("workers",))
+        f = lambda v, i: X.exchange_dist(codec, v[0], i[0], "workers")
+        dv, di = jax.jit(shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(),
+                                   check_vma=False))(sv, si)
+        np.testing.assert_array_equal(np.asarray(lv[0]), np.asarray(dv))
+        np.testing.assert_array_equal(np.asarray(li[0]), np.asarray(di))
+
+
 class TestElastic:
     def test_graph_engine_resize_mid_run(self):
         """ASYMP elastic restart: checkpoint at 8 shards, resume at 4 (and
@@ -183,8 +309,6 @@ class TestElastic:
         from repro.configs.base import GraphConfig
         from repro.core import engine as E, graph as G, merger, programs as PR
         from repro.ft.elastic import repartition_state
-        import sys, os
-        sys.path.insert(0, os.path.dirname(__file__))
         from conftest import csr_edges
 
         cfg8 = GraphConfig(name="t", algorithm="cc", num_vertices=512,
