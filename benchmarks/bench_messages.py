@@ -4,7 +4,9 @@ per-vertex propagation average (paper §5.7: ~2.5 propagations/vertex).
 Also the exchange-substrate wire study (``--wire`` or default run): the
 same RMAT graph under raw vs compressed wire codecs — identical CC labels
 (the narrowing is gated lossless), with per-tick and total wire bytes from
-``repro.dist.exchange`` accounting.
+``repro.dist.exchange`` accounting — extended across the aggregator
+family: labelprop (max, int), reachability (or, int — rides int8),
+widest-path (max, float — floor-quantized, never over-estimates).
 """
 from __future__ import annotations
 
@@ -65,9 +67,50 @@ def wire_study() -> None:
           f"CC labels identical on {np.size(raw[2])} vertices")
 
 
+def wire_study_semirings() -> None:
+    """Wire bytes across the aggregator family: the max and or semiring
+    paths through the same codec.  Int-label programs must be bit-exact;
+    the float max program must never over-estimate (floor direction)."""
+    print("== exchange substrate: wire bytes, max/or semiring paths ==")
+    jobs = [
+        # (algorithm, weighted, requested mode, exact?)
+        ("labelprop", False, "int16", True),
+        ("reachability", False, "int8", True),  # bound 2 -> int8 lossless
+        ("widest_path", True, "int16", False),
+    ]
+    for algo, weighted, mode, exact in jobs:
+        cfg0 = GraphConfig(name=f"{algo}-wire", algorithm=algo,
+                           num_vertices=1 << 13, avg_degree=16,
+                           generator="rmat", num_shards=8, priority="log",
+                           enforce_fraction=0.1, weighted=weighted)
+        outs = {}
+        for m in ("none", mode):
+            cfg = dataclasses.replace(cfg0, wire_compression=m)
+            g, state, tot = run_asymp(cfg)
+            prog = prog_mod.get_program(cfg)
+            ep = E.default_params(cfg, g, prog)
+            codec = E.wire_codec(prog, ep)
+            assert codec.compression == m, (algo, m, codec.compression)
+            outs[m] = merger.extract(state, g, prog)
+            emit(f"wire/{algo}/{m}", tot["wall_s"] * 1e6,
+                 f"agg={prog.aggregator.name};ticks={tot['ticks']};"
+                 f"bytes_per_tick={codec.wire_bytes_per_tick()};"
+                 f"dir={codec.quantize_direction}")
+        if exact:
+            assert (outs["none"] == outs[mode]).all(), \
+                f"compressed exchange changed the {algo} fixpoint"
+        else:  # floor-quantized widths may undershoot, never overshoot
+            fin = np.isfinite(outs["none"])
+            assert (outs[mode][fin] <= outs["none"][fin] + 1e-6).all(), \
+                "compressed widest-path over-estimated a width"
+        print(f"   {algo}: {mode} wire "
+              f"{'bit-exact' if exact else 'never over-estimates'}")
+
+
 def main() -> None:
     table2()
     wire_study()
+    wire_study_semirings()
 
 
 if __name__ == "__main__":

@@ -20,6 +20,47 @@ from repro.core import graph as G
 from repro.kernels.ops import bsp_connected_components
 
 
+def smoke() -> None:
+    """CI gate: tiny runs that fail fast (exit 1) on engine regressions.
+
+    Checks one min-aggregator (cc) and one max-aggregator (labelprop)
+    workload for correctness against the kernel-backed BSP baseline plus
+    deterministic tick/message budgets — hardware-independent, so a CI
+    failure means the engine regressed, not the runner.
+    """
+    from repro.configs.base import GraphConfig
+
+    cfg = GraphConfig(name="smoke", algorithm="cc", num_vertices=1 << 12,
+                      avg_degree=16, generator="rmat", num_shards=8,
+                      priority="log", enforce_fraction=0.1)
+    g = G.build_sharded_graph(cfg)
+    bsp_out, _ = bsp_connected_components(g)
+    comp = np.asarray(bsp_out)
+
+    _, state, tot = run_asymp(cfg, graph=g)
+    labels = np.asarray(state.values).reshape(-1)[: g.num_real_vertices]
+    assert tot["converged"], "smoke: cc did not converge"
+    assert (labels == comp).all(), "smoke: cc labels drifted from BSP oracle"
+    assert tot["ticks"] <= 500, f"smoke: cc tick blow-up ({tot['ticks']})"
+    assert tot["sent"] <= 5 * g.num_edges, \
+        f"smoke: cc message blow-up ({tot['sent']} vs E={g.num_edges})"
+    emit("smoke/cc", tot["wall_s"] * 1e6,
+         f"ticks={tot['ticks']};messages={tot['sent']}")
+
+    # max-aggregator path: labelprop oracle seeded with the BSP components
+    cfg_lp = dataclasses.replace(cfg, algorithm="labelprop",
+                                 name="smoke-labelprop")
+    oracle = G.labelprop_oracle(g.num_real_vertices, comp=comp)
+    _, state, tot = run_asymp(cfg_lp, graph=g)
+    labels = np.asarray(state.values).reshape(-1)[: g.num_real_vertices]
+    assert tot["converged"], "smoke: labelprop did not converge"
+    assert (labels == oracle).all(), "smoke: labelprop labels wrong"
+    assert tot["ticks"] <= 500 and tot["sent"] <= 5 * g.num_edges
+    emit("smoke/labelprop", tot["wall_s"] * 1e6,
+         f"ticks={tot['ticks']};messages={tot['sent']}")
+    print("== smoke OK ==")
+
+
 def main() -> None:
     print("== Fig 6: speed — ASYMP vs BSP (Pregel-equivalent) ==")
     for gen, n in [("rmat", 1 << 14), ("er", 1 << 13), ("grid", 64 * 64),
@@ -48,4 +89,8 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    if "--smoke" in sys.argv:
+        smoke()
+    else:
+        main()

@@ -1,5 +1,6 @@
 """Graph-mining scenario: CC + SSSP with failures and priority ablation —
-the paper's §5 experience in one script.
+the paper's §5 experience in one script — plus the aggregator-semiring
+family (reachability / widest-path / label propagation).
 
     PYTHONPATH=src python examples/graph_mining.py
 """
@@ -47,3 +48,21 @@ dist = merger.extract(state, g2, programs.get_program(sssp_cfg))
 reach = np.isfinite(dist)
 print(f"  reached {reach.sum()}/{len(dist)} vertices, "
       f"mean distance {dist[reach].mean():.3f}, ticks={tot['ticks']}")
+
+# --- pluggable aggregation semirings (core/semiring.py) ---
+print("== aggregator family: or / max-min / max ==")
+for algo, gg in [("reachability", g), ("widest_path", g2), ("labelprop", g)]:
+    cfg = dataclasses.replace(base, algorithm=algo, name=f"demo-{algo}",
+                              weighted=(algo == "widest_path"))
+    prog = programs.get_program(cfg)
+    state, tot = engine.run_to_convergence(cfg, graph=gg, prog=prog)
+    out = merger.extract(state, gg, prog)
+    if algo == "reachability":
+        stat = f"reached={int(out.sum())}"
+    elif algo == "widest_path":
+        fin = np.isfinite(out) & (out > 0)
+        stat = f"mean width={out[fin].mean():.3f}"
+    else:
+        stat = f"components={len(np.unique(out))}"
+    print(f"  {algo:12s} ({prog.aggregator.name}-aggregation) "
+          f"ticks={tot['ticks']:4d} {stat}")

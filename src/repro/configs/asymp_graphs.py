@@ -36,6 +36,20 @@ CONFIGS: dict[str, GraphConfig] = {
     # compressed-wire CC: labels ride int16 (lossless below the sentinel
     # bound — see dist/exchange.effective_compression)
     "asymp_cc_wire": rmat(14, algorithm="cc", wire_compression="int16"),
+    # aggregator-semiring family (core/semiring.py): or / max-min / max
+    "asymp_reach": rmat(16, algorithm="reachability"),
+    # reachability bits always narrow losslessly (value bound 2), so even
+    # int8 wire is exact
+    "asymp_reach_wire": rmat(16, algorithm="reachability",
+                             wire_compression="int8"),
+    "asymp_widest": rmat(14, algorithm="widest_path", weighted=True),
+    # widest-path widths floor-quantize on the wire (max-monotone: decoded
+    # widths never over-estimate)
+    "asymp_widest_wire": rmat(14, algorithm="widest_path", weighted=True,
+                              wire_compression="int16"),
+    "asymp_labelprop": rmat(16, algorithm="labelprop"),
+    "asymp_labelprop_wire": rmat(14, algorithm="labelprop",
+                                 wire_compression="int16"),
     # production-mesh structural config (dry-run only: 512 shards)
     "asymp_cc_prod": rmat(26, shards=512, algorithm="cc"),
     "asymp_sssp_prod": rmat(26, shards=512, algorithm="sssp", weighted=True),

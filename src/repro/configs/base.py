@@ -260,7 +260,9 @@ class GraphConfig:
     """ASYMP graph workload config (the paper's own configs)."""
 
     name: str
-    algorithm: str  # "cc" | "sssp" | "bfs" | "pagerank" | "labelprop"
+    # any program registered in core/programs.py:
+    # "cc" | "sssp" | "bfs" | "reachability" | "widest_path" | "labelprop"
+    algorithm: str
     num_vertices: int
     avg_degree: int
     generator: str = "rmat"  # rmat | er | grid | chain | star | file
@@ -280,6 +282,9 @@ class GraphConfig:
     max_ticks: int = 100000
     seed: int = 0
     weighted: bool = False
+    # source vertex for single-source programs (sssp/bfs/reachability/
+    # widest_path); ignored by the others
+    source: int = 0
 
     @property
     def num_edges(self) -> int:

@@ -1,1 +1,1 @@
-from repro.core import engine, faults, graph, merger, programs  # noqa: F401
+from repro.core import engine, faults, graph, merger, programs, semiring  # noqa: F401

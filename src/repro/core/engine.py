@@ -10,7 +10,9 @@ One tick per shard (Fig 1 / Fig 2 mapped to SPMD):
   route      — bucket messages by destination shard into fixed-capacity
                buffers (bounded queues); overflow => sender retries next tick
                (backpressure); one all_to_all delivers everything
-  receive    — idempotent scatter-min; improved vertices join the frontier
+  receive    — idempotent scatter-⊕ via the program's Aggregator (min for
+               CC/SSSP/BFS, max for widest-path/labelprop, or for
+               reachability); improved vertices join the frontier
 
 Two execution modes sharing the same per-shard code:
   local  — arrays [P, ...] on one device, vmap + transpose as the exchange
@@ -82,10 +84,12 @@ def wire_codec(prog, ep: EngineParams) -> ex_mod.WireCodec:
     return ex_mod.make_wire_codec(
         num_shards=ep.num_shards, capacity=ep.route_capacity, vs=ep.vs,
         requested=ep.wire_compression, value_kind=prog.dtype,
-        identity=prog.identity, max_int_value=ep.wire_value_bound)
+        identity=prog.identity, max_int_value=ep.wire_value_bound,
+        quantize_direction=prog.aggregator.quantize_direction)
 
 
-def default_params(cfg: GraphConfig, graph: ShardedGraph) -> EngineParams:
+def default_params(cfg: GraphConfig, graph: ShardedGraph,
+                   prog=None) -> EngineParams:
     P_, vs = graph.num_shards, graph.vs
     budget = cfg.edge_budget or max(graph.es // 4, 256)
     d_cap = max(min(cfg.avg_degree, 64), 4)
@@ -94,14 +98,16 @@ def default_params(cfg: GraphConfig, graph: ShardedGraph) -> EngineParams:
     # §Perf iter G1: 1.25x slack (was 2x) — wire and buffer traffic scale
     # with cap; overflow just retries next tick (bounded-queue semantics)
     cap = cfg.route_capacity or max(budget // P_ + budget // (4 * P_), 64)
-    prog = prog_mod.get_program(cfg)
+    prog = prog or prog_mod.get_program(cfg)
+    bound = prog.wire_bound(graph.num_vertices)
     wire = ex_mod.effective_compression(cfg.wire_compression, prog.dtype,
-                                        graph.num_vertices)
+                                        bound)
     return EngineParams(
         num_shards=P_, vs=vs, max_vertices_per_tick=m, degree_window=d_cap,
         route_capacity=int(cap), enforce_fraction=cfg.enforce_fraction,
-        priority=cfg.priority, priority_scale=float(graph.num_vertices),
-        wire_compression=wire, wire_value_bound=graph.num_vertices)
+        priority=cfg.priority,
+        priority_scale=prog.priority_scale or float(graph.num_vertices),
+        wire_compression=wire, wire_value_bound=bound)
 
 
 # ======================================================================
@@ -135,8 +141,11 @@ def _phase1_create(prog, ep: EngineParams, values, active, cursor,
     n_active = jnp.sum(active)
     target = jnp.clip(jnp.ceil(ep.enforce_fraction * n_active), 1, M
                       ).astype(jnp.int32)
-    buckets = priority_buckets(prog.priority_value(values), ep.priority,
-                               ep.priority_scale)
+    # the aggregator orients the program's raw potential metric into an
+    # ascending key (min: low value first; max/or: high value first)
+    pkey = prog.aggregator.priority_key(prog.priority_value(values),
+                                        ep.priority_scale)
+    buckets = priority_buckets(pkey, ep.priority, ep.priority_scale)
     hist = jnp.zeros((N_BUCKETS,), jnp.int32).at[buckets].add(
         active.astype(jnp.int32))
     cum = jnp.cumsum(hist)
@@ -215,16 +224,19 @@ def _phase1_create(prog, ep: EngineParams, values, active, cursor,
 
 def _phase2_receive(prog, ep: EngineParams, values, active, cursor,
                     recv_vals, recv_ids):
-    """Deliver: idempotent scatter-min; improved vertices activate."""
+    """Deliver: idempotent scatter-⊕ (the program's aggregator); improved
+    vertices activate."""
+    agg = prog.aggregator
     vs = ep.vs
     ids = recv_ids.reshape(-1)
     vals = recv_vals.reshape(-1).astype(prog.jdtype)
     valid = ids >= 0
     idx = jnp.where(valid, ids, vs)  # vs -> dropped (out of bounds)
     old = values
-    values = values.at[idx].min(vals, mode="drop")
-    accepted = jnp.sum(valid & (vals < old[jnp.clip(idx, 0, vs - 1)]))
-    changed = values < old
+    values = agg.scatter(values, idx, vals)
+    accepted = jnp.sum(valid & agg.improves(vals,
+                                            old[jnp.clip(idx, 0, vs - 1)]))
+    changed = agg.improves(values, old)
     active = active | changed
     cursor = jnp.where(changed, 0, cursor)
     return values, active, cursor, accepted
@@ -342,11 +354,11 @@ def run_to_convergence(cfg: GraphConfig, *, graph: Optional[ShardedGraph] = None
 
     graph = graph or build_sharded_graph(cfg)
     prog = prog or prog_mod.get_program(cfg)
-    ep = params or default_params(cfg, graph)
+    ep = params or default_params(cfg, graph, prog)
     g = to_device_graph(graph)
     tick_fn = make_local_tick(prog, ep, prog.weighted)
     state = init_state(prog, graph)
-    max_ticks = max_ticks or cfg.max_ticks
+    max_ticks = cfg.max_ticks if max_ticks is None else max_ticks
 
     log = []
     totals = {"ticks": 0, "sent": 0, "accepted": 0, "fetched": 0,
@@ -354,6 +366,9 @@ def run_to_convergence(cfg: GraphConfig, *, graph: Optional[ShardedGraph] = None
     fault_mgr = faults_mod.FaultManager(cfg, graph, prog, ep) \
         if fault_plan is not None else None
 
+    # max_ticks == 0 (or an initially empty frontier) must still report a
+    # well-defined activity count after the loop
+    n_active = int(jnp.sum(state.active))
     for t in range(max_ticks):
         state, stats, send_bufs = tick_fn(state, g)
         n_active = int(stats.active)
@@ -393,6 +408,7 @@ def lower_tick_for_mesh(cfg: GraphConfig, mesh_2d, n_workers: int):
     from repro.dist.sharding import vertex_partition
     vs = vertex_partition(cfg.num_vertices, n_workers).vs
     es = max(cfg.num_edges * 2 // n_workers, 1)  # symmetrized estimate
+    bound = prog.wire_bound(cfg.num_vertices)
     ep = EngineParams(
         num_shards=n_workers, vs=vs,
         max_vertices_per_tick=min(max((cfg.edge_budget or es // 4)
@@ -401,10 +417,10 @@ def lower_tick_for_mesh(cfg: GraphConfig, mesh_2d, n_workers: int):
         route_capacity=max(((cfg.edge_budget or es // 4) * 5)
                            // (4 * n_workers), 64),
         enforce_fraction=cfg.enforce_fraction, priority=cfg.priority,
-        priority_scale=float(cfg.num_vertices),
+        priority_scale=prog.priority_scale or float(cfg.num_vertices),
         wire_compression=ex_mod.effective_compression(
-            cfg.wire_compression, prog.dtype, cfg.num_vertices),
-        wire_value_bound=cfg.num_vertices)
+            cfg.wire_compression, prog.dtype, bound),
+        wire_value_bound=bound)
     tick_fn = make_dist_tick(prog, ep, mesh, prog.weighted)
 
     sh = lambda spec: NamedSharding(mesh, spec)

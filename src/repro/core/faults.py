@@ -12,6 +12,14 @@ Implements the paper's three-step mechanism:
      the failed shard — strictly correct by self-stabilization, at the cost
      of extra messages (the same trade the paper describes).
 
+Replay (and the boundary fallback) delivers *duplicated* messages, so it
+is only legal for programs whose receive-side reduce is idempotent —
+``VertexProgram.self_stabilizing`` (paper §3.3).  Programs that declare
+``self_stabilizing=False`` are rejected by the replay path: the manager
+falls back to a *globally consistent* checkpoint restore (every shard
+rolls back to the same snapshot tick — BSP-style, strictly more
+expensive, but correct without idempotence).
+
 `FaultPlan` encodes the paper's §5.5 experiments: fail x% of shards once /
 all once / all twice over the course of the run ("rolling failures").
 """
@@ -25,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import GraphConfig
-from repro.core.engine import EngineParams, EngineState
+from repro.core.engine import EngineParams, EngineState, init_state
 
 
 @dataclasses.dataclass
@@ -57,6 +65,10 @@ class FaultPlan:
 class FaultManager:
     def __init__(self, cfg: GraphConfig, graph, prog, ep: EngineParams):
         self.cfg, self.graph, self.prog, self.ep = cfg, graph, prog, ep
+        # replay recovery re-delivers (duplicates) messages — legal only
+        # under the §3.3 idempotence precondition
+        self.recovery = ("replay" if getattr(prog, "self_stabilizing", True)
+                         else "checkpoint")
         self.ckpt_every = cfg.checkpoint_every
         self.log_ticks = cfg.replay_log_ticks
         # per-shard checkpoint: tick -> (values, active, cursor) rows
@@ -75,11 +87,12 @@ class FaultManager:
             for p in range(self.graph.num_shards):
                 self.ckpt[p] = (vals[p].copy(), act[p].copy(), cur[p].copy())
                 self.ckpt_tick[p] = t
-        sv, si = send_bufs
-        self.msg_log[t] = (np.asarray(sv), np.asarray(si))
-        for old in list(self.msg_log):
-            if old < t - self.log_ticks:
-                del self.msg_log[old]
+        if self.recovery == "replay":  # checkpoint mode never reads the log
+            sv, si = send_bufs
+            self.msg_log[t] = (np.asarray(sv), np.asarray(si))
+            for old in list(self.msg_log):
+                if old < t - self.log_ticks:
+                    del self.msg_log[old]
 
     # ------------------------------------------------------------------
     def maybe_fail(self, t: int, state: EngineState, plan: FaultPlan):
@@ -96,7 +109,14 @@ class FaultManager:
     def fail_shard(self, t: int, state: EngineState, p: int
                    ) -> tuple[EngineState, int]:
         """Kill shard p: wipe its state, restore from its checkpoint, replay
-        peer messages (or boundary re-activation beyond the log horizon)."""
+        peer messages (or boundary re-activation beyond the log horizon).
+
+        Non-self-stabilizing programs skip all of that: both replay and
+        boundary re-activation hand the shard duplicated messages, which
+        only an idempotent reduce tolerates — they take the global
+        checkpoint-restore path instead."""
+        if self.recovery == "checkpoint":
+            return self._global_restore(state), 0
         values = np.asarray(state.values).copy()
         active = np.asarray(state.active).copy()
         cursor = np.asarray(state.cursor).copy()
@@ -127,9 +147,10 @@ class FaultManager:
                 ids_in = si[:, p, :].reshape(-1)
                 valid = ids_in >= 0
                 replayed += int(valid.sum())
+                improves = self.prog.aggregator.improves
                 for i in np.nonzero(valid)[0]:
                     j = int(ids_in[i])
-                    if vals_in[i] < values[p, j]:
+                    if improves(vals_in[i], values[p, j]):
                         values[p, j] = vals_in[i]
                         active[p, j] = True
                         cursor[p, j] = 0
@@ -144,3 +165,18 @@ class FaultManager:
                 cursor[q] = np.where(b, 0, cursor[q])
         return EngineState(jnp.asarray(values), jnp.asarray(active),
                            jnp.asarray(cursor), state.tick), replayed
+
+    # ------------------------------------------------------------------
+    def _global_restore(self, state: EngineState) -> EngineState:
+        """BSP-style recovery for non-idempotent programs: EVERY shard
+        rolls back to the last (globally consistent) snapshot — snapshots
+        are taken between host-loop ticks, so no messages are in flight at
+        the restore point.  With no snapshot yet, re-initialize the run."""
+        if not self.ckpt:
+            return init_state(self.prog, self.graph)._replace(tick=state.tick)
+        P_ = self.graph.num_shards
+        values = np.stack([self.ckpt[p][0] for p in range(P_)])
+        active = np.stack([self.ckpt[p][1] for p in range(P_)])
+        cursor = np.stack([self.ckpt[p][2] for p in range(P_)])
+        return EngineState(jnp.asarray(values), jnp.asarray(active),
+                           jnp.asarray(cursor), state.tick)

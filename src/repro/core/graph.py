@@ -186,6 +186,52 @@ def cc_oracle(n: int, edges: np.ndarray) -> np.ndarray:
     return np.array([find(i) for i in range(n)], dtype=np.int64)
 
 
+def reachability_oracle(n: int, edges: np.ndarray,
+                        source: int = 0) -> np.ndarray:
+    """1 iff reachable from ``source`` (on the symmetrized graph the
+    reachable set is exactly the source's connected component)."""
+    comp = cc_oracle(n, edges)
+    return (comp == comp[source]).astype(np.int64)
+
+
+def labelprop_oracle(n: int, edges: Optional[np.ndarray] = None,
+                     comp: Optional[np.ndarray] = None) -> np.ndarray:
+    """Max vertex id per component (the max-aggregator mirror of CC).
+
+    ``comp`` — precomputed per-vertex component ids (any labeling that is
+    constant within a component, e.g. CC output) — skips the union-find.
+    """
+    if comp is None:
+        comp = cc_oracle(n, edges)
+    max_of_comp = np.full(n, -1, dtype=np.int64)
+    np.maximum.at(max_of_comp, comp, np.arange(n, dtype=np.int64))
+    return max_of_comp[comp]
+
+
+def widest_path_oracle(n: int, src_arr: np.ndarray, dst_arr: np.ndarray,
+                       w_arr: np.ndarray, source: int = 0) -> np.ndarray:
+    """Max-min Dijkstra over a directed edge list: width[v] = max over
+    paths of the minimum edge weight along the path (source = +inf)."""
+    import heapq
+
+    adj: list[list[tuple[int, float]]] = [[] for _ in range(n)]
+    for s, d, wt in zip(src_arr, dst_arr, w_arr):
+        adj[int(s)].append((int(d), float(wt)))
+    width = np.zeros(n)
+    width[source] = np.inf
+    pq = [(-np.inf, source)]
+    while pq:
+        neg_wu, u = heapq.heappop(pq)
+        if -neg_wu < width[u]:
+            continue
+        for v, wt in adj[u]:
+            cand = min(width[u], wt)
+            if cand > width[v]:
+                width[v] = cand
+                heapq.heappush(pq, (-cand, v))
+    return width
+
+
 def sssp_oracle(n: int, edges: np.ndarray, w: np.ndarray,
                 source: int) -> np.ndarray:
     """Dijkstra (heapq) over the symmetrized weighted graph."""

@@ -1,17 +1,29 @@
 """Vertex programs (the paper's user API: Init / CreateMessage /
-ReceiveMessage / GetOutputString, §4).
+ReceiveMessage / GetOutputString, §4) over pluggable aggregation semirings.
 
-A program is self-stabilizing iff its update is idempotent and commutative
-(paper §3.3) — min-semiring programs (CC, SSSP, BFS) are; they tolerate
-arbitrary message order, duplication and replay, which is what makes the
-lockless engine and the replay-based fault recovery correct.
+A program declares its receive-side reduce as an explicit
+:class:`~repro.core.semiring.Aggregator` (min / max / or).  Every
+aggregator shipped here is commutative and idempotent, which is the
+paper's §3.3 self-stabilization precondition: such programs tolerate
+arbitrary message order, duplication and replay — what makes the lockless
+engine and the replay-based fault recovery correct.  A program whose
+update is NOT idempotent must set ``self_stabilizing=False``; the fault
+manager then refuses replay recovery and falls back to a globally
+consistent checkpoint restore (see ``core/faults.py``).
+
+The registry is parameterized: ``get_program("sssp", source=5)`` or
+``get_program(cfg)`` (which forwards ``cfg.source`` to programs that
+take one).
 """
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Callable, Optional
 
 import jax.numpy as jnp
+
+from repro.core.semiring import MAX, MIN, OR, Aggregator
 
 INT_INF = jnp.iinfo(jnp.int32).max
 F32_INF = jnp.float32(jnp.inf)
@@ -21,20 +33,42 @@ F32_INF = jnp.float32(jnp.inf)
 class VertexProgram:
     name: str
     dtype: str  # "int32" | "float32"
-    identity: float  # reduce identity (min-semiring: +inf)
+    aggregator: Aggregator  # the receive-side reduce ⊕ (ReceiveMessage)
     weighted: bool
     # init(global_ids [vs], valid [vs]) -> (values, active)
     init: Callable
     # combine(src_value [M,1], weight [M,D] | None) -> message values [M,D]
     combine: Callable
-    # priority_value(values) -> float32 score, lower = propagate sooner
+    # priority_value(values) -> f32 raw potential metric; the aggregator's
+    # priority_key orients it (min: low value = propagate sooner, max:
+    # high value = propagate sooner)
     priority_value: Callable
     # output(values) -> final per-vertex output
     output: Callable = staticmethod(lambda v: v)
+    # §3.3: update is idempotent+commutative => replay/duplication safe.
+    # All aggregator-based programs here qualify; flip off for programs
+    # with non-idempotent state (routes recovery to checkpoint-restore).
+    self_stabilizing: bool = True
+    # wire gate: tightest bound B such that every int payload < B
+    # (None -> num_vertices, the label-valued default)
+    value_bound: Optional[Callable] = None
+    # priority normalization hint (None -> num_vertices)
+    priority_scale: Optional[float] = None
 
     @property
     def jdtype(self):
         return jnp.int32 if self.dtype == "int32" else jnp.float32
+
+    @property
+    def identity(self):
+        """The aggregation identity in this program's dtype (empty wire
+        slots, decode target of the wire sentinel)."""
+        return self.aggregator.identity(self.dtype)
+
+    def wire_bound(self, num_vertices: int) -> int:
+        """Int-payload bound gating lossless wire narrowing."""
+        return (self.value_bound(num_vertices) if self.value_bound
+                else num_vertices)
 
 
 def connected_components() -> VertexProgram:
@@ -52,7 +86,7 @@ def connected_components() -> VertexProgram:
         # low cluster ids have the greatest potential (paper §5.6)
         return values.astype(jnp.float32)
 
-    return VertexProgram("cc", "int32", INT_INF, False, init, combine,
+    return VertexProgram("cc", "int32", MIN, False, init, combine,
                          priority_value)
 
 
@@ -72,7 +106,7 @@ def sssp(source: int = 0) -> VertexProgram:
     def priority_value(values):
         return values  # small distances first (asynchronous Dijkstra)
 
-    return VertexProgram("sssp", "float32", F32_INF, True, init, combine,
+    return VertexProgram("sssp", "float32", MIN, True, init, combine,
                          priority_value)
 
 
@@ -91,18 +125,120 @@ def bfs(source: int = 0) -> VertexProgram:
     def priority_value(values):
         return values.astype(jnp.float32)
 
-    return VertexProgram("bfs", "int32", INT_INF, False, init, combine,
+    return VertexProgram("bfs", "int32", MIN, False, init, combine,
                          priority_value)
 
 
-PROGRAMS = {"cc": connected_components, "sssp": sssp, "bfs": bfs}
+def reachability(source: int = 0) -> VertexProgram:
+    """Or-semiring saturation: value = 1 iff reachable from ``source``.
+
+    The boolean payload rides the wire as int32 {0, 1}, so every
+    compressed mode is lossless (value bound 2 << int8 sentinel).
+    """
+
+    def init(global_ids, valid):
+        values = jnp.where(valid & (global_ids == source), 1, 0
+                           ).astype(jnp.int32)
+        active = valid & (global_ids == source)
+        return values, active
+
+    def combine(src_values, weights):
+        del weights
+        return src_values  # propagate the saturated bit
+
+    def priority_value(values):
+        return values.astype(jnp.float32)  # frontier is uniform anyway
+
+    return VertexProgram("reachability", "int32", OR, False, init, combine,
+                         priority_value, value_bound=lambda n: 2)
 
 
-def get_program(cfg) -> VertexProgram:
-    if cfg.algorithm == "cc":
-        return connected_components()
-    if cfg.algorithm == "sssp":
-        return sssp(0)
-    if cfg.algorithm == "bfs":
-        return bfs(0)
-    raise ValueError(cfg.algorithm)
+def widest_path(source: int = 0) -> VertexProgram:
+    """Max-min semiring: state = widest bottleneck width from ``source``
+    (maximize, over paths, the minimum edge weight along the path).
+
+    Float payloads floor-quantize on a compressed wire (the max
+    aggregator's direction), so a decoded width never over-estimates.
+    """
+
+    def init(global_ids, valid):
+        values = jnp.where(valid & (global_ids == source), F32_INF, 0.0
+                           ).astype(jnp.float32)
+        active = valid & (global_ids == source)
+        return values, active
+
+    def combine(src_values, weights):
+        w = weights if weights is not None else 1.0
+        return jnp.minimum(src_values, w)  # path bottleneck
+
+    def priority_value(values):
+        return values  # wide paths first (priority_key inverts: scale - v)
+
+    return VertexProgram("widest_path", "float32", MAX, True, init, combine,
+                         priority_value, priority_scale=1.0)
+
+
+def labelprop() -> VertexProgram:
+    """Max-label propagation: every vertex converges to the maximum
+    vertex id in its component (the advertised ``labelprop`` config
+    value — the max-aggregator mirror of CC)."""
+
+    def init(global_ids, valid):
+        values = jnp.where(valid, global_ids, -1).astype(jnp.int32)
+        return values, valid
+
+    def combine(src_values, weights):
+        del weights
+        return src_values
+
+    def priority_value(values):
+        # high labels have the greatest potential (priority_key: scale - v)
+        return values.astype(jnp.float32)
+
+    return VertexProgram("labelprop", "int32", MAX, False, init, combine,
+                         priority_value)
+
+
+PROGRAMS: dict[str, Callable[..., VertexProgram]] = {
+    "cc": connected_components,
+    "sssp": sssp,
+    "bfs": bfs,
+    "reachability": reachability,
+    "widest_path": widest_path,
+    "labelprop": labelprop,
+}
+
+
+def register_program(name: str, factory: Callable[..., VertexProgram]) -> None:
+    """Add a user program to the registry (the paper's 'write four
+    functions' extension point)."""
+    PROGRAMS[name] = factory
+
+
+def get_program(cfg_or_name, **params) -> VertexProgram:
+    """Parameterized registry lookup.
+
+    ``get_program("sssp", source=5)`` builds the program directly;
+    ``get_program(cfg)`` resolves ``cfg.algorithm`` and forwards the
+    config fields the factory accepts (currently ``source``).  Explicit
+    ``params`` win over config-derived ones.
+    """
+    if isinstance(cfg_or_name, str):
+        name, derived = cfg_or_name, {}
+    else:
+        cfg = cfg_or_name
+        name = cfg.algorithm
+        derived = {"source": getattr(cfg, "source", 0)}
+    if name not in PROGRAMS:
+        raise ValueError(
+            f"unknown program {name!r}; registered: {sorted(PROGRAMS)}")
+    factory = PROGRAMS[name]
+    accepted = inspect.signature(factory).parameters
+    # config-derived params are best-effort (cc takes no source), but a
+    # caller's explicit kwarg the factory can't accept is an error
+    unknown = set(params) - set(accepted)
+    if unknown:
+        raise TypeError(f"{name} does not take {sorted(unknown)}; "
+                        f"accepts {sorted(accepted)}")
+    merged = {**derived, **params}
+    return factory(**{k: v for k, v in merged.items() if k in accepted})

@@ -1,0 +1,134 @@
+"""Aggregation semirings: the pluggable receive-side reduce contract.
+
+ASYMP's correctness story (paper §3.3) never depended on ``min`` per se —
+only on the receive-side reduce being commutative, associative and
+idempotent, so that arbitrary message ordering, duplication and replay
+leave the fixpoint unchanged (self-stabilization).  ``Aggregator`` makes
+that contract an explicit object: the engine's scatter/activation, the
+priority queue's ordering key, the wire codec's quantization direction
+and the Pallas kernels' reduce all derive from it instead of hardcoding
+scatter-min.
+
+Three aggregators ship:
+
+  * ``MIN`` — min-monotone programs (CC, SSSP, BFS).  Values only ever
+    decrease; lossy wire encodings must round *up* (never under-estimate,
+    or compression could push a value below the true fixpoint).
+  * ``MAX`` — max-monotone programs (widest-path, max-label propagation).
+    Values only ever increase; lossy encodings must round *down* (never
+    over-estimate).  Payloads are assumed non-negative (graph labels,
+    path widths), so the int identity is ``-1`` and the float identity
+    ``0.0`` — both narrow losslessly.
+  * ``OR`` — boolean saturation (reachability): ``max`` over {0, 1}.
+
+All three are idempotent (``a ⊕ a = a``), which is exactly the property
+the replay-based fault recovery needs; a :class:`~repro.core.programs.
+VertexProgram` whose update is *not* idempotent must set
+``self_stabilizing=False`` and is routed to checkpoint-restore recovery
+instead (see ``core/faults.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+INT_INF = jnp.iinfo(jnp.int32).max
+
+
+@dataclasses.dataclass(frozen=True)
+class Aggregator:
+    """One commutative/idempotent reduce ⊕ and everything derived from it.
+
+    Instances are module-level singletons closed over by jit (hashable by
+    identity, like the programs that carry them).
+    """
+
+    name: str
+    # identity(dtype: "int32" | "float32") -> the ⊕-identity scalar
+    # (the "no information" message: sent in empty wire slots, decoded
+    # from the wire sentinel, used as the kernel's masked fill)
+    identity: Callable[[str], float]
+    # scatter(values [vs], idx [n], vals [n]) -> values  (idempotent
+    # scatter-⊕; out-of-bounds idx rows drop)
+    scatter: Callable
+    # improves(new, old) -> bool mask: does `new` strictly improve `old`?
+    # (plain <, > so it works on jnp arrays AND host numpy scalars — the
+    # fault manager's replay loop runs it on the host)
+    improves: Callable
+    # lossy float wire rounding: "up" (ceil — decoded >= original, safe
+    # for min-monotone) | "down" (floor — decoded <= original, safe for
+    # max-monotone)
+    quantize_direction: str
+    # masked dense reduce for the Pallas kernel: reduce(x, axis=..)
+    reduce: Callable
+    # segment_reduce(data, segment_ids, num_segments=..) for the oracles
+    segment_reduce: Callable
+    # elementwise merge of two value arrays (the self-stabilizing tie of
+    # a fresh pull against the current state)
+    tie: Callable
+    # priority_key(pv, scale) -> f32 where LOWER = propagate sooner: the
+    # engine's bucketed queue is ascending, so descending-potential
+    # aggregators invert their program's raw metric here
+    priority_key: Callable
+
+
+MIN = Aggregator(
+    name="min",
+    identity=lambda dtype: INT_INF if dtype == "int32" else float("inf"),
+    scatter=lambda values, idx, vals: values.at[idx].min(vals, mode="drop"),
+    improves=lambda new, old: new < old,
+    quantize_direction="up",
+    reduce=jnp.min,
+    segment_reduce=jax.ops.segment_min,
+    tie=jnp.minimum,
+    priority_key=lambda pv, scale: pv,
+)
+
+MAX = Aggregator(
+    name="max",
+    identity=lambda dtype: -1 if dtype == "int32" else 0.0,
+    scatter=lambda values, idx, vals: values.at[idx].max(vals, mode="drop"),
+    improves=lambda new, old: new > old,
+    quantize_direction="down",
+    reduce=jnp.max,
+    segment_reduce=jax.ops.segment_max,
+    tie=jnp.maximum,
+    priority_key=lambda pv, scale: scale - pv,
+)
+
+OR = Aggregator(
+    name="or",
+    identity=lambda dtype: 0,
+    scatter=lambda values, idx, vals: values.at[idx].max(vals, mode="drop"),
+    improves=lambda new, old: new > old,
+    quantize_direction="down",
+    reduce=jnp.max,
+    segment_reduce=jax.ops.segment_max,
+    tie=jnp.maximum,
+    priority_key=lambda pv, scale: scale - pv,
+)
+
+AGGREGATORS: dict[str, Aggregator] = {a.name: a for a in (MIN, MAX, OR)}
+
+# The kernel-layer semiring names (kernels/semiring_spmv.py) and the
+# aggregator each one's *reduce* is an instance of.  ``plus_times`` has
+# no aggregator: (+) is not idempotent, so no ASYMP vertex program may
+# use it as a receive-side reduce (PageRank goes through the pull-mode
+# recomputation in kernels/ops.py instead).
+SEMIRING_AGGREGATOR: dict[str, Optional[str]] = {
+    "min": "min",
+    "min_plus": "min",
+    "max": "max",
+    "max_min": "max",
+    "or": "or",
+    "plus_times": None,
+}
+
+
+def for_semiring(semiring: str) -> Optional[Aggregator]:
+    """The Aggregator behind a kernel semiring name (None = plus_times)."""
+    agg = SEMIRING_AGGREGATOR[semiring]
+    return AGGREGATORS[agg] if agg is not None else None

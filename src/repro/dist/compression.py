@@ -9,9 +9,11 @@ Two consumers, one toolbox:
     per-microbatch reduction would go on the wire);
   * the **engine's message buffers** — ``repro.dist.exchange`` encodes
     send buffers with :func:`quantize_rows` / :func:`dequantize_rows`
-    (per-destination-row scales, *ceil* rounding so a min-semiring value
-    is never under-estimated — safety of asynchronous relaxation survives
-    the lossy round-trip).
+    (per-destination-row scales, rounded in the aggregation direction:
+    *ceil* for min-monotone programs so a relaxed value is never
+    under-estimated, *floor* for max-monotone programs so a width/label
+    is never over-estimated — safety of asynchronous relaxation survives
+    the lossy round-trip on both sides of the fixpoint).
 
 All functions are pure jnp and jit/shard_map-traceable.
 """
@@ -96,25 +98,30 @@ def compressed_psum(x: jnp.ndarray, axis_name: str,
 # ======================================================================
 # Row-quantized buffers (engine wire format for float payloads)
 # ======================================================================
-def quantize_rows(vals: jnp.ndarray, bits: int
+def quantize_rows(vals: jnp.ndarray, bits: int, direction: str = "up"
                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """f32 [..., cap] -> (intN codes, f32 [..., 1] per-row scale).
 
-    Non-finite entries (the min-semiring identity, +inf) encode as the
-    sentinel ``qmax + 1``.  Finite magnitudes use *ceil* rounding: the
-    decoded value is >= the original, so an asynchronously relaxed minimum
-    can converge slower but never below the true fixpoint.
+    Non-finite entries (an infinite aggregation identity) encode as the
+    sentinel ``qmax + 1``.  Finite magnitudes round in ``direction``:
+
+      * ``"up"`` (ceil, in the signed domain): decoded >= original — a
+        min-monotone relaxation converges slower but never below the
+        true fixpoint;
+      * ``"down"`` (floor): decoded <= original — a max-monotone
+        relaxation (widest path, max-label) never over-estimates.
     """
     assert bits in (8, 16), bits
+    assert direction in ("up", "down"), direction
     qmax = (1 << (bits - 1)) - 2  # 126 / 32766; qmax+1 is the inf sentinel
     dtype = jnp.int8 if bits == 8 else jnp.int16
     finite = jnp.isfinite(vals)
     mag = jnp.where(finite, jnp.abs(vals), 0.0)
     scale = jnp.maximum(jnp.max(mag, axis=-1, keepdims=True), _EPS
                         ).astype(jnp.float32)
-    # ceil in the *signed* domain: negatives round toward zero, so the
-    # decoded value is >= the original for every sign (min-semiring safety)
-    q = jnp.ceil(vals / scale * qmax)
+    # rounding in the *signed* domain keeps the guarantee for every sign
+    rnd = jnp.ceil if direction == "up" else jnp.floor
+    q = rnd(vals / scale * qmax)
     q = jnp.where(finite, jnp.clip(q, -qmax, qmax), qmax + 1)
     return q.astype(dtype), scale
 
@@ -136,7 +143,10 @@ def narrow_int(vals: jnp.ndarray, bits: int, identity) -> jnp.ndarray:
     Lossless iff every real value fits below the sentinel (callers gate on
     that bound — see ``exchange.effective_compression``); out-of-range
     values saturate to the sentinel, which decodes back to the identity
-    (a *weaker* message: safe for min-semiring programs, never wrong).
+    (a *weaker* message under any aggregation order: safe for min- and
+    max-monotone programs alike, never wrong).  Negative identities (the
+    max aggregator uses -1) fit the narrow formats directly and
+    round-trip without the sentinel.
     """
     assert bits in (8, 16), bits
     sentinel = (1 << (bits - 1)) - 1  # 127 / 32767

@@ -14,13 +14,15 @@ every sender ``p``.  Two transports implement it:
 Both run the *same* wire codec so their results are bit-identical:
 
   * ``none``  — int32 values + int32 ids (the raw baseline);
-  * ``int16``/``int8`` — integer payloads (CC/BFS labels) narrow
-    losslessly when the value bound fits (sentinel = identity), float
-    payloads (SSSP distances) quantize per destination row with ceil
-    rounding (see ``compression.quantize_rows``) — self-stabilizing
-    min-semiring programs tolerate the lossy round-trip because decoded
-    values never under-estimate.  Ids narrow to int16 whenever the shard
-    width fits.
+  * ``int16``/``int8`` — integer payloads (CC/BFS/label-prop labels,
+    reachability bits) narrow losslessly when the value bound fits
+    (sentinel = the program's aggregation identity), float payloads
+    (SSSP distances, widest-path widths) quantize per destination row
+    rounded in the aggregator's direction (ceil for min-monotone, floor
+    for max-monotone — see ``compression.quantize_rows``): the
+    self-stabilizing relaxation tolerates the lossy round-trip because a
+    decoded value never crosses the fixpoint from the wrong side.  Ids
+    narrow to int16 whenever the shard width fits.
 
 ``effective_compression`` is the gate: a requested mode that cannot be
 carried safely (e.g. int16 labels on a 10^6-vertex graph) falls back to
@@ -72,6 +74,10 @@ class WireCodec:
     value_kind: str  # "int32" | "float32"
     identity: float  # decode target for the sentinel code
     compress_ids: bool  # ids as int16 (requires vs <= 32766)
+    # float rounding direction, from the program's aggregator: "up" keeps
+    # min-monotone values from under-estimating, "down" keeps max-monotone
+    # values from over-estimating (never cross the fixpoint)
+    quantize_direction: str = "up"
 
     @property
     def bits(self) -> int:
@@ -84,7 +90,7 @@ class WireCodec:
             return vals, None
         if self.value_kind == "int32":
             return C.narrow_int(vals, self.bits, self.identity), None
-        return C.quantize_rows(vals, self.bits)
+        return C.quantize_rows(vals, self.bits, self.quantize_direction)
 
     def decode(self, payload: jnp.ndarray,
                scales: Optional[jnp.ndarray]) -> jnp.ndarray:
@@ -119,13 +125,15 @@ class WireCodec:
 
 def make_wire_codec(num_shards: int, capacity: int, vs: int,
                     requested: str, value_kind: str, identity,
-                    max_int_value: int = 0) -> WireCodec:
+                    max_int_value: int = 0,
+                    quantize_direction: str = "up") -> WireCodec:
     mode = effective_compression(requested, value_kind, max_int_value)
     return WireCodec(
         num_shards=num_shards, capacity=capacity, compression=mode,
         value_kind=value_kind, identity=float(identity)
         if value_kind == "float32" else int(identity),
-        compress_ids=(mode != "none" and vs <= _INT_SENTINEL[16] - 1))
+        compress_ids=(mode != "none" and vs <= _INT_SENTINEL[16] - 1),
+        quantize_direction=quantize_direction)
 
 
 # ======================================================================

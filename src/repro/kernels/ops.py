@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import ShardedGraph
+from repro.core.semiring import for_semiring
 from repro.kernels import ref as ref_mod
 from repro.kernels.semiring_spmv import (EDGE_BLOCK, TILE, _identity,
                                          spmv_partials)
@@ -110,9 +111,10 @@ def _pull_step(values, edge_src, edge_dst_local, block_tile, weights, *,
         tiles = jax.ops.segment_sum(partials, block_tile,
                                     num_segments=n_tiles)
     else:
-        tiles = jax.ops.segment_min(partials, block_tile,
-                                    num_segments=n_tiles)
-        tiles = jnp.minimum(tiles, ident)
+        agg = for_semiring(semiring)
+        tiles = agg.segment_reduce(partials, block_tile,
+                                   num_segments=n_tiles)
+        tiles = agg.tie(tiles, ident)
     return tiles.reshape(n_tiles * TILE)
 
 
@@ -122,8 +124,8 @@ def frontier_pull_step(values: jnp.ndarray, pg: PulledGraph, *,
                        interpret: bool = True) -> jnp.ndarray:
     """One full propagation: out[v] = reduce over in-edges combine(src, w).
 
-    For min semirings the result is further min'd with the current values
-    (self-stabilizing update)."""
+    For idempotent (aggregator-backed) semirings the result is further
+    tied against the current values (the self-stabilizing update)."""
     vpad = pg.num_vertices - values.shape[0]
     v = jnp.pad(values, (0, vpad), constant_values=_identity(semiring,
                                                              values.dtype)
@@ -136,7 +138,7 @@ def frontier_pull_step(values: jnp.ndarray, pg: PulledGraph, *,
                      use_kernel=use_kernel, use_mxu=use_mxu,
                      interpret=interpret)
     if semiring != "plus_times":
-        out = jnp.minimum(out, v)
+        out = for_semiring(semiring).tie(out, v)
     return out[: values.shape[0]] if vpad else out
 
 

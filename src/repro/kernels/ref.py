@@ -6,7 +6,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.semiring_spmv import EDGE_BLOCK, TILE, _identity
+from repro.core.semiring import for_semiring
+from repro.kernels.semiring_spmv import EDGE_BLOCK, TILE, _combine, _identity
 
 
 def spmv_partials_ref(edge_vals, edge_dst_local, edge_weights, *,
@@ -17,23 +18,20 @@ def spmv_partials_ref(edge_vals, edge_dst_local, edge_weights, *,
     n_blocks = n // EDGE_BLOCK
     if edge_weights is None:
         edge_weights = jnp.ones((n,), dtype)
-    if semiring == "min":
-        cand = edge_vals
-    elif semiring == "min_plus":
-        cand = edge_vals + edge_weights.astype(dtype)
-    else:
-        cand = edge_vals * edge_weights.astype(dtype)
+    cand = _combine(semiring, edge_vals, edge_weights.astype(dtype))
     block = jnp.arange(n) // EDGE_BLOCK
     dst = edge_dst_local.astype(jnp.int32)
     seg = jnp.where(dst >= 0, block * TILE + dst, n_blocks * TILE)
     if semiring == "plus_times":
         flat = jax.ops.segment_sum(cand, seg, num_segments=n_blocks * TILE + 1)
     else:
-        flat = jax.ops.segment_min(cand, seg, num_segments=n_blocks * TILE + 1)
-        ident = _identity(semiring, dtype)
-        # segment_min fills empty segments with dtype max; align to identity
-        flat = jnp.where(jnp.isin(jnp.arange(n_blocks * TILE + 1), seg),
-                         flat, ident)
+        agg = for_semiring(semiring)
+        flat = agg.segment_reduce(cand, seg, num_segments=n_blocks * TILE + 1)
+        # clamp at the aggregation identity: empty segments (dtype-extreme
+        # filled) become the identity, and payloads outside the
+        # aggregator's domain (e.g. negative values under MAX) clamp to it
+        # — exactly what the kernel's masked identity fill computes
+        flat = agg.tie(flat, _identity(semiring, dtype))
     return flat[:-1].reshape(n_blocks, TILE)
 
 
@@ -42,19 +40,17 @@ def full_propagation_ref(values, edge_src, edge_dst, edge_weights, *,
     """Whole-graph pull step: out[v] = reduce over in-edges (oracle for
     ops.frontier_pull_step)."""
     vals = values[edge_src]
-    if semiring == "min":
-        cand = vals
-    elif semiring == "min_plus":
-        cand = vals + edge_weights
-    else:
-        cand = vals * edge_weights
+    if edge_weights is None:
+        edge_weights = jnp.ones_like(vals)
+    cand = _combine(semiring, vals, edge_weights.astype(vals.dtype))
     valid = edge_dst >= 0
     seg = jnp.where(valid, edge_dst, num_vertices)
     if semiring == "plus_times":
         out = jax.ops.segment_sum(jnp.where(valid, cand, 0), seg,
                                   num_segments=num_vertices + 1)[:-1]
         return out
-    out = jax.ops.segment_min(jnp.where(valid, cand, _identity(semiring,
-                                                               values.dtype)),
-                              seg, num_segments=num_vertices + 1)[:-1]
-    return jnp.minimum(out, _identity(semiring, values.dtype))
+    agg = for_semiring(semiring)
+    ident = _identity(semiring, values.dtype)
+    out = agg.segment_reduce(jnp.where(valid, cand, ident), seg,
+                             num_segments=num_vertices + 1)[:-1]
+    return agg.tie(out, ident)

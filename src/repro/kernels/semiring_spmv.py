@@ -6,7 +6,16 @@ destination-sorted edge stream:
 
     out[dst] = REDUCE over in-edges e: COMBINE(values[src_e], w_e)
 
-with semirings (min, .) for CC, (min, +) for SSSP/BFS, (+, *) for PageRank.
+with semirings (min, .) for CC, (min, +) for SSSP/BFS, (max, .) for
+label propagation, (max, min) for widest path, (or, .) for reachability,
+and (+, *) for PageRank.  Every idempotent REDUCE is one of the
+``repro.core.semiring`` Aggregators — the kernel takes its identity and
+reduce from the same definitions the engine aggregates with, so kernel
+names and engine programs cannot drift.  Aggregator semirings reduce
+*clamped at the identity* (the masked lanes of a tile contribute it), so
+payloads are assumed to live in the aggregator's domain — at or above
+the identity for MAX/OR (labels, widths >= 0), at or below for MIN;
+ref.py applies the same clamp.
 
 TPU mapping (the C2 state/edge asymmetry, one level down the hierarchy):
   * vertex values stay resident; the big edge arrays stream HBM -> VMEM in
@@ -34,25 +43,30 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.semiring import for_semiring
+
 TILE = 128  # destination vertices per tile (= VPU lane width)
 EDGE_BLOCK = 512  # edges streamed per grid step (VMEM working set)
 
-SEMIRINGS = ("min", "min_plus", "plus_times")
+SEMIRINGS = ("min", "min_plus", "max", "max_min", "or", "plus_times")
 
 
 def _identity(semiring: str, dtype):
-    if semiring == "plus_times":
+    agg = for_semiring(semiring)
+    if agg is None:  # plus_times: (+)-identity
         return jnp.zeros((), dtype)
-    if dtype == jnp.int32 or dtype == jnp.dtype("int32"):
-        return jnp.array(jnp.iinfo(jnp.int32).max, dtype)
-    return jnp.array(jnp.inf, dtype)
+    kind = ("int32" if jnp.issubdtype(jnp.dtype(dtype), jnp.integer)
+            else "float32")
+    return jnp.array(agg.identity(kind), dtype)
 
 
 def _combine(semiring: str, vals, w):
-    if semiring == "min":
+    if semiring in ("min", "max", "or"):
         return vals
     if semiring == "min_plus":
         return vals + w
+    if semiring == "max_min":
+        return jnp.minimum(vals, w)  # path bottleneck
     return vals * w  # plus_times
 
 
@@ -77,8 +91,12 @@ def _spmv_kernel(vals_ref, dst_ref, w_ref, out_ref, *, semiring: str,
             out = jnp.where(hit, cand[:, None], 0.0).sum(axis=0)
         out_ref[0, :] = out.astype(dtype)
     else:
+        agg = for_semiring(semiring)
         ident = _identity(semiring, dtype)
-        out_ref[0, :] = jnp.where(hit, cand[:, None], ident).min(axis=0)
+        red = agg.reduce(jnp.where(hit, cand[:, None], ident), axis=0)
+        # explicit clamp at the identity: a lane fully covered by hits
+        # would otherwise escape the masked fill's implicit clamp
+        out_ref[0, :] = agg.tie(red, ident)
 
 
 def spmv_partials(edge_vals: jnp.ndarray, edge_dst_local: jnp.ndarray,

@@ -6,6 +6,7 @@ per-tick metrics log.
 
   python -m repro.launch.graph_mine --config asymp_cc [--failures 0.5]
   python -m repro.launch.graph_mine --config asymp_sssp --out /tmp/sssp.tsv
+  python -m repro.launch.graph_mine --algorithm widest_path --source 7
 """
 from __future__ import annotations
 
@@ -25,6 +26,11 @@ from repro.core.faults import FaultPlan
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--config", default="asymp_cc")
+    ap.add_argument("--algorithm", default=None, choices=sorted(PR.PROGRAMS),
+                    help="run any registered program on the config's graph "
+                         "(no dedicated config needed)")
+    ap.add_argument("--source", type=int, default=None,
+                    help="source vertex for single-source programs")
     ap.add_argument("--failures", type=float, default=0.0,
                     help="fraction of shards to fail (0.5/1.0/2.0)")
     ap.add_argument("--priority", default=None)
@@ -34,17 +40,27 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg = get_graph_config(args.config)
-    if args.priority or args.enforce is not None:
-        import dataclasses
-        kw = {}
-        if args.priority:
-            kw["priority"] = args.priority
-        if args.enforce is not None:
-            kw["enforce_fraction"] = args.enforce
+    import dataclasses
+    kw = {}
+    if args.priority:
+        kw["priority"] = args.priority
+    if args.enforce is not None:
+        kw["enforce_fraction"] = args.enforce
+    if args.algorithm:
+        kw["algorithm"] = args.algorithm
+    if args.source is not None:
+        kw["source"] = args.source
+    if kw:
         cfg = dataclasses.replace(cfg, **kw)
+    prog = PR.get_program(cfg)
+    if prog.weighted and not cfg.weighted:
+        # weighted programs need edge weights on the graph
+        cfg = dataclasses.replace(cfg, weighted=True)
 
-    print(f"[graph_mine] {cfg.name}: V={cfg.num_vertices} "
-          f"E~{cfg.num_edges} shards={cfg.num_shards} "
+    print(f"[graph_mine] {cfg.name}: program={prog.name} "
+          f"({prog.aggregator.name}-aggregation"
+          f"{', weighted' if prog.weighted else ''}) "
+          f"V={cfg.num_vertices} E~{cfg.num_edges} shards={cfg.num_shards} "
           f"priority={cfg.priority}@{cfg.enforce_fraction}")
     t0 = time.time()
     graph = G.build_sharded_graph(cfg)
@@ -54,14 +70,13 @@ def main() -> None:
     plan = (FaultPlan(fail_fraction=args.failures, start_tick=4, every=6)
             if args.failures > 0 else None)
     t0 = time.time()
-    state, totals = E.run_to_convergence(cfg, graph=graph, fault_plan=plan,
-                                         collect_log=True)
+    state, totals = E.run_to_convergence(cfg, graph=graph, prog=prog,
+                                         fault_plan=plan, collect_log=True)
     wall = time.time() - t0
     print(f"[graph_mine] propagation: {totals['ticks']} ticks, "
           f"{totals['sent']} messages, {totals['failures']} failures, "
           f"converged={totals['converged']} in {wall:.1f}s")
 
-    prog = PR.get_program(cfg)
     out = merger.extract(state, graph, prog)
     if args.out:
         with open(args.out, "w") as f:
@@ -72,8 +87,20 @@ def main() -> None:
         with open(args.metrics, "w") as f:
             json.dump({k: v for k, v in totals.items()}, f, indent=1)
     import numpy as np
-    uniq = len(np.unique(out)) if cfg.algorithm == "cc" else "-"
-    print(f"[graph_mine] merger: {len(out)} vertices, components={uniq}")
+    if cfg.algorithm in ("cc", "labelprop"):
+        summary = f"components={len(np.unique(out))}"
+    elif cfg.algorithm == "reachability":
+        summary = f"reached={int(np.sum(out))}"
+    else:  # distance/width-valued programs: unreached = the identity
+        out_f = out.astype(np.float64)
+        reached = np.asarray(prog.aggregator.improves(out_f,
+                                                      float(prog.identity)))
+        finite = reached & np.isfinite(out_f)
+        summary = (f"reached={int(reached.sum())};"
+                   f"mean={out_f[finite].mean():.3f}" if finite.any()
+                   else f"reached={int(reached.sum())}")
+    print(f"[graph_mine] merger ({prog.name}): {len(out)} vertices, "
+          f"{summary}")
 
 
 if __name__ == "__main__":

@@ -37,6 +37,9 @@ class TestKernelVsOracle:
     @pytest.mark.parametrize("semiring,dtype", [
         ("min", jnp.int32), ("min", jnp.float32),
         ("min_plus", jnp.float32),
+        ("max", jnp.int32), ("max", jnp.float32),
+        ("max_min", jnp.float32),
+        ("or", jnp.int32),
         ("plus_times", jnp.float32),
     ])
     @pytest.mark.parametrize("n_blocks", [1, 3, 8])
@@ -59,6 +62,17 @@ class TestKernelVsOracle:
         b = R.spmv_partials_ref(vals, dst, w, semiring="plus_times")
         _cmp(a, b, jnp.float32)
 
+    def test_max_clamps_at_identity(self):
+        """Aggregator semirings reduce clamped at the identity — uniform
+        between kernel and ref even for lanes fully covered by hits
+        (payloads below the identity are outside the MAX domain)."""
+        vals = jnp.full((EDGE_BLOCK,), -5.0, jnp.float32)
+        dst = jnp.zeros((EDGE_BLOCK,), jnp.int32)
+        k = spmv_partials(vals, dst, None, semiring="max", interpret=True)
+        r = R.spmv_partials_ref(vals, dst, None, semiring="max")
+        assert (np.asarray(k) == np.asarray(r)).all()
+        assert float(k[0, 0]) == 0.0  # clamped at the MAX float identity
+
     def test_all_padding_block(self):
         n = EDGE_BLOCK
         vals = jnp.zeros((n,), jnp.float32)
@@ -68,7 +82,8 @@ class TestKernelVsOracle:
 
     @settings(max_examples=15, deadline=None)
     @given(st.integers(1, 4), st.integers(0, 2 ** 31 - 1),
-           st.sampled_from(["min", "min_plus", "plus_times"]))
+           st.sampled_from(["min", "min_plus", "max", "max_min",
+                            "plus_times"]))
     def test_hypothesis_random(self, n_blocks, seed, semiring):
         key = jax.random.PRNGKey(seed)
         n = n_blocks * EDGE_BLOCK
