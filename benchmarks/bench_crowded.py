@@ -1,0 +1,197 @@
+"""Paper §5.4: crowded-cluster resilience — what happens when 50% of the
+machines are slowed down?
+
+ASYMP's claim is that asynchronous priority scheduling degrades
+gracefully on crowded clusters: slowing or killing half the machines
+raises CC running time by only ~41%, because healthy shards keep making
+progress instead of waiting at a barrier.  This benchmark reproduces the
+*shape* of that result under the repo's deterministic emulation
+(``repro/dist/latency.py``):
+
+Emulation model (also documented in docs/REPRODUCTION.md):
+
+  * one engine tick = one unit of emulated wall-clock — every machine
+    gets the same slice of real time per tick;
+  * a *crowded* shard gets through less work in that slice: its per-tick
+    edge budget is divided by ``intensity`` (budget throttling in
+    ``_phase1_create``), and its outgoing messages spend ``link_delay``
+    extra ticks in the exchange substrate's deferred-delivery ring;
+  * therefore **ticks-to-convergence IS the emulated wall-clock**, and
+    the §5.4 degradation ratio is ``ticks(crowded) / ticks(healthy)``
+    for the same scheduling policy.
+
+Schedulers compared under the *same* seeded latency profile:
+
+  * FIFO      — ``priority=disabled`` (arbitrary frontier order, the
+    paper's strawman), full enforcement;
+  * PRIORITY  — ``priority=log`` bucketed queues (§3.5), plus the
+    straggler-aware demotion of slow-link-activated work
+    (``straggler_demote``; a tie-breaker under constant link delays,
+    where each link preserves its own message order).
+
+``--smoke`` is the CI gate: it asserts the §5.4 shape (50% slow shards
+=> degradation ratio < 2x, priority strictly beating FIFO) and that the
+converged fixpoint under EVERY latency profile is bit-identical to the
+zero-latency run for EVERY registered program (§3.3 self-stabilization
+under delayed + reordered delivery).
+
+    PYTHONPATH=src python -m benchmarks.bench_crowded --smoke
+    PYTHONPATH=src python -m benchmarks.bench_crowded
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import emit, run_asymp
+from repro.configs.base import GraphConfig
+from repro.core import graph as G
+from repro.core import merger
+from repro.core import programs as PR
+from repro.dist import latency as L
+
+# the two scheduling policies under test (same budget, same latency)
+FIFO = dict(priority="disabled", straggler_demote=0)
+PRIORITY = dict(priority="log", straggler_demote=8)
+
+HEALTHY = dict(profile="uniform", link_delay=0)
+CROWDED = dict(profile="stragglers", slow_fraction=0.5, link_delay=2,
+               intensity=4)
+
+
+def _scenario_cfg(algorithm: str = "sssp", log2n: int = 12,
+                  edge_budget: int = 512) -> GraphConfig:
+    """Budget-bound configuration: the per-tick edge budget is scarce, so
+    *which* frontier work gets it (the scheduler) decides the tick count."""
+    return GraphConfig(
+        name=f"crowd-{algorithm}", algorithm=algorithm,
+        num_vertices=1 << log2n, avg_degree=16, generator="rmat",
+        num_shards=8, enforce_fraction=1.0, edge_budget=edge_budget,
+        weighted=algorithm in ("sssp", "widest_path"), **PRIORITY)
+
+
+def _run(cfg: GraphConfig, graph, profile: str = "none", **lat_kw):
+    lat = L.make_latency_model(profile, cfg.num_shards,
+                               seed=cfg.latency_seed, **lat_kw)
+    _, _, tot = run_asymp(cfg, graph=graph, latency=lat)
+    return tot
+
+
+def degradation(cfg: GraphConfig, graph, crowded_kw=CROWDED) -> dict:
+    """ticks under healthy vs crowded conditions for one policy."""
+    h = _run(cfg, graph, **HEALTHY)
+    c = _run(cfg, graph, **crowded_kw)
+    assert h["converged"] and c["converged"]
+    return {"healthy": h, "crowded": c,
+            "ratio": c["ticks"] / max(h["ticks"], 1)}
+
+
+# ======================================================================
+def _tiny_cfg(algorithm: str) -> GraphConfig:
+    return GraphConfig(
+        name=f"tiny-{algorithm}", algorithm=algorithm, num_vertices=512,
+        avg_degree=5, generator="rmat", num_shards=4, enforce_fraction=0.5,
+        weighted=algorithm in ("sssp", "widest_path"))
+
+
+def check_fixpoint_invariance(verbose: bool = True) -> None:
+    """Every registered program x every latency profile: the converged
+    output must be bit-identical to the zero-latency run (§3.3
+    self-stabilization, exercised under delay + reordering)."""
+    for name in sorted(PR.PROGRAMS):
+        cfg = _tiny_cfg(name)
+        g = G.build_sharded_graph(cfg)
+        prog = PR.get_program(cfg)
+        _, s0, t0 = run_asymp(cfg, graph=g)
+        base = merger.extract(s0, g, prog)
+        assert t0["converged"], name
+        for profile in ("uniform", "stragglers", "heavy_tail"):
+            lat = L.make_latency_model(profile, cfg.num_shards,
+                                       slow_fraction=0.5, link_delay=3,
+                                       intensity=3, seed=1)
+            _, s, tot = run_asymp(cfg, graph=g, latency=lat)
+            out = merger.extract(s, g, prog)
+            assert tot["converged"], (name, profile)
+            assert (np.asarray(out) == np.asarray(base)).all(), \
+                f"fixpoint drifted: {name} under {profile}"
+            if verbose:
+                emit(f"crowded/fixpoint/{name}/{profile}",
+                     tot["wall_s"] * 1e6,
+                     f"ticks={tot['ticks']};identical=True")
+
+
+def smoke() -> None:
+    """CI gate for the §5.4 shape (deterministic: seeded graph, seeded
+    profiles — a failure means the engine or scheduler regressed)."""
+    check_fixpoint_invariance(verbose=False)
+    print("== smoke: fixpoints bit-identical under every latency profile "
+          f"for all {len(PR.PROGRAMS)} registered programs ==")
+
+    cfg = _scenario_cfg("sssp")
+    g = G.build_sharded_graph(cfg)
+    prio = degradation(cfg, g)
+    fifo = degradation(dataclasses.replace(cfg, **FIFO), g)
+    emit("smoke/crowded/priority", prio["crowded"]["wall_s"] * 1e6,
+         f"ticks_healthy={prio['healthy']['ticks']};"
+         f"ticks_crowded={prio['crowded']['ticks']};"
+         f"degradation_x={prio['ratio']:.2f}")
+    emit("smoke/crowded/fifo", fifo["crowded"]["wall_s"] * 1e6,
+         f"ticks_healthy={fifo['healthy']['ticks']};"
+         f"ticks_crowded={fifo['crowded']['ticks']};"
+         f"degradation_x={fifo['ratio']:.2f}")
+    assert prio["ratio"] < 2.0, \
+        f"smoke: 50% slow shards degraded priority by {prio['ratio']:.2f}x"
+    assert prio["crowded"]["ticks"] < fifo["crowded"]["ticks"], \
+        "smoke: priority scheduling must strictly beat FIFO when crowded"
+    assert prio["crowded"]["sent"] < fifo["crowded"]["sent"], \
+        "smoke: priority scheduling must send fewer messages when crowded"
+    print("== smoke OK: degradation "
+          f"{prio['ratio']:.2f}x < 2x with 50% slow shards; priority "
+          f"{prio['crowded']['ticks']} ticks < FIFO "
+          f"{fifo['crowded']['ticks']} ticks under the same profile ==")
+
+
+def main() -> None:
+    print("== §5.4: crowded-cluster emulation (rmat12 sssp, 8 shards) ==")
+    cfg = _scenario_cfg("sssp")
+    g = G.build_sharded_graph(cfg)
+
+    print("-- slowdown fraction x intensity sweep (priority scheduler) --")
+    h = _run(cfg, g, **HEALTHY)
+    emit("crowded/healthy", h["wall_s"] * 1e6, f"ticks={h['ticks']}")
+    for frac in (0.25, 0.5, 0.75):
+        for intensity in (2, 4, 8):
+            c = _run(cfg, g, profile="stragglers", slow_fraction=frac,
+                     link_delay=2, intensity=intensity)
+            emit(f"crowded/slow{int(frac * 100)}/x{intensity}",
+                 c["wall_s"] * 1e6,
+                 f"ticks={c['ticks']};"
+                 f"degradation_x={c['ticks'] / h['ticks']:.2f};"
+                 f"messages={c['sent']}")
+
+    print("-- scheduler comparison under the same profile --")
+    for label, kw in [("fifo", FIFO), ("priority", PRIORITY),
+                      ("priority_nodemote",
+                       dict(priority="log", straggler_demote=0))]:
+        d = degradation(dataclasses.replace(cfg, **kw), g)
+        emit(f"crowded/sched/{label}", d["crowded"]["wall_s"] * 1e6,
+             f"ticks_healthy={d['healthy']['ticks']};"
+             f"ticks_crowded={d['crowded']['ticks']};"
+             f"degradation_x={d['ratio']:.2f};"
+             f"messages_crowded={d['crowded']['sent']}")
+
+    print("-- latency profiles (priority scheduler) --")
+    for profile in ("uniform", "stragglers", "heavy_tail"):
+        c = _run(cfg, g, profile=profile, slow_fraction=0.5, link_delay=3,
+                 intensity=4)
+        emit(f"crowded/profile/{profile}", c["wall_s"] * 1e6,
+             f"ticks={c['ticks']};degradation_x={c['ticks'] / h['ticks']:.2f}")
+
+
+if __name__ == "__main__":
+    import sys
+    if "--smoke" in sys.argv:
+        smoke()
+    else:
+        main()

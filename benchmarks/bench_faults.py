@@ -1,5 +1,9 @@
 """Paper Fig 9a: fault tolerance — runtime factor vs failure volume
-(50% / 100% / 200% of shards, rolling) + slow-shard (straggler) scenario."""
+(50% / 100% / 200% of shards, rolling) + slow-shard (straggler) scenario.
+
+    PYTHONPATH=src python -m benchmarks.bench_faults          # figure
+    PYTHONPATH=src python -m benchmarks.bench_faults --smoke  # CI gate
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -9,6 +13,28 @@ from repro.configs.base import GraphConfig
 from repro.core import engine as E
 from repro.core import graph as G
 from repro.core.faults import FaultPlan
+
+
+def smoke() -> None:
+    """CI gate: failing every shard once (rolling) must recover through
+    replay and converge with a bounded tick overhead."""
+    cfg = GraphConfig(name="rmat12", algorithm="cc", num_vertices=1 << 12,
+                      avg_degree=16, generator="rmat", num_shards=8,
+                      priority="log", enforce_fraction=0.1,
+                      checkpoint_every=6, replay_log_ticks=8)
+    g = G.build_sharded_graph(cfg)
+    _, _, base = run_asymp(cfg, graph=g)
+    assert base["converged"]
+    plan = FaultPlan(fail_fraction=1.0, start_tick=4, every=5)
+    _, _, tot = run_asymp(cfg, graph=g, fault_plan=plan)
+    overhead = tot["ticks"] / base["ticks"]
+    emit("smoke/fig9a/fail100", tot["wall_s"] * 1e6,
+         f"failures={tot['failures']};replayed={tot['replayed']};"
+         f"tick_overhead_x={overhead:.2f}")
+    assert tot["converged"] and tot["failures"] == cfg.num_shards
+    assert tot["replayed"] > 0, "smoke: recovery never exercised replay"
+    assert overhead < 3.0, f"smoke: failure overhead blew up ({overhead:.2f}x)"
+    print(f"== smoke OK: 100% rolling failures, {overhead:.2f}x ticks ==")
 
 
 def main() -> None:
@@ -43,4 +69,8 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    if "--smoke" in sys.argv:
+        smoke()
+    else:
+        main()

@@ -1,8 +1,30 @@
 """Paper Fig 7: input scalability — runtime/messages vs graph size at fixed
-shard count (RMAT family + the SSSP variant)."""
+shard count (RMAT family + the SSSP variant).
+
+    PYTHONPATH=src python -m benchmarks.bench_scalability          # figure
+    PYTHONPATH=src python -m benchmarks.bench_scalability --smoke  # CI gate
+"""
 from __future__ import annotations
 
 from benchmarks.common import emit, graph_family, run_asymp
+
+
+def smoke() -> None:
+    """CI gate: two small sizes; message volume must scale with the edge
+    count sub-quadratically (the paper's linear-ish Fig 7 shape)."""
+    rows = []
+    for cfg in graph_family(sizes=(11, 13)):
+        g, _, tot = run_asymp(cfg)
+        assert tot["converged"], cfg.name
+        rows.append((g.num_edges, tot["sent"]))
+        emit(f"smoke/fig7/{cfg.name}", tot["wall_s"] * 1e6,
+             f"edges={g.num_edges};messages={tot['sent']}")
+    (e0, m0), (e1, m1) = rows
+    growth, edge_growth = m1 / max(m0, 1), e1 / e0
+    assert growth < edge_growth * 2, \
+        f"smoke: message volume grew {growth:.1f}x on {edge_growth:.1f}x edges"
+    print("== smoke OK: messages scale with edges "
+          f"({growth:.1f}x on {edge_growth:.1f}x) ==")
 
 
 def main() -> None:
@@ -29,4 +51,8 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    if "--smoke" in sys.argv:
+        smoke()
+    else:
+        main()

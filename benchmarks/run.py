@@ -10,11 +10,12 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_evolution, bench_faults, bench_kernels,
-                            bench_messages, bench_parallel, bench_priority,
-                            bench_scalability, bench_speed)
+    from benchmarks import (bench_crowded, bench_evolution, bench_faults,
+                            bench_kernels, bench_messages, bench_parallel,
+                            bench_priority, bench_scalability, bench_speed)
     mods = [bench_speed, bench_scalability, bench_parallel, bench_faults,
-            bench_priority, bench_messages, bench_evolution, bench_kernels]
+            bench_crowded, bench_priority, bench_messages, bench_evolution,
+            bench_kernels]
     only = sys.argv[1] if len(sys.argv) > 1 else ""
     t0 = time.time()
     failures = 0

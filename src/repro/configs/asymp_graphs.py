@@ -11,12 +11,12 @@ RMAT_ABCD = (0.47, 0.19, 0.19, 0.05)
 
 
 def rmat(log2_nodes: int, *, shards: int = 8, algorithm: str = "cc",
-         **kw) -> GraphConfig:
+         avg_degree: int = 32, **kw) -> GraphConfig:
     return GraphConfig(
         name=f"rmat{log2_nodes}-{algorithm}",
         algorithm=algorithm,
         num_vertices=1 << log2_nodes,
-        avg_degree=32,
+        avg_degree=avg_degree,
         generator="rmat",
         rmat_abcd=RMAT_ABCD,
         num_shards=shards,
@@ -50,6 +50,21 @@ CONFIGS: dict[str, GraphConfig] = {
     "asymp_labelprop": rmat(16, algorithm="labelprop"),
     "asymp_labelprop_wire": rmat(14, algorithm="labelprop",
                                  wire_compression="int16"),
+    # crowded-cluster emulation (paper §5.4, dist/latency.py): half the
+    # shards crowded — outgoing links gain 2 wire ticks, work budget /4;
+    # the priority scheduler keeps the degradation well under 2x
+    # (benchmarks/bench_crowded.py asserts the shape in CI)
+    "asymp_cc_crowded": rmat(14, algorithm="cc", avg_degree=16,
+                             latency_profile="stragglers",
+                             slow_fraction=0.5, link_delay=2,
+                             slow_intensity=4, edge_budget=1024,
+                             enforce_fraction=1.0),
+    "asymp_sssp_crowded": rmat(12, algorithm="sssp", weighted=True,
+                               avg_degree=16,
+                               latency_profile="stragglers",
+                               slow_fraction=0.5, link_delay=2,
+                               slow_intensity=4, edge_budget=512,
+                               enforce_fraction=1.0),
     # production-mesh structural config (dry-run only: 512 shards)
     "asymp_cc_prod": rmat(26, shards=512, algorithm="cc"),
     "asymp_sssp_prod": rmat(26, shards=512, algorithm="sssp", weighted=True),

@@ -282,6 +282,16 @@ class GraphConfig:
     max_ticks: int = 100000
     seed: int = 0
     weighted: bool = False
+    # crowded-cluster emulation (paper §5.4; dist/latency.py):
+    # "none" | "uniform" | "stragglers" | "heavy_tail"
+    latency_profile: str = "none"
+    slow_fraction: float = 0.5  # fraction of shards crowded (stragglers)
+    link_delay: int = 2  # wire delay (ticks) on a crowded shard's links
+    slow_intensity: int = 4  # work-budget divisor for crowded shards
+    latency_seed: int = 0
+    # straggler-aware scheduling: bucket penalty demoting frontier work
+    # that was activated over a slow link (0 = plain priority queue)
+    straggler_demote: int = 8
     # source vertex for single-source programs (sssp/bfs/reachability/
     # widest_path); ignored by the others
     source: int = 0

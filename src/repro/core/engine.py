@@ -73,6 +73,11 @@ class EngineParams:
     priority_scale: float  # normalization for bucketing
     wire_compression: str = "none"  # effective wire mode (pre-gated)
     wire_value_bound: int = 0  # int-payload bound gating lossless narrowing
+    # straggler-aware scheduling (crowded-cluster emulation): bucket
+    # penalty applied to frontier work activated over a slow link, so
+    # settled work drains first and soon-to-be-improved values are not
+    # propagated redundantly (0 = off; only the crowded tick uses it)
+    straggler_demote: int = 0
 
 
 def wire_codec(prog, ep: EngineParams) -> ex_mod.WireCodec:
@@ -107,7 +112,8 @@ def default_params(cfg: GraphConfig, graph: ShardedGraph,
         route_capacity=int(cap), enforce_fraction=cfg.enforce_fraction,
         priority=cfg.priority,
         priority_scale=prog.priority_scale or float(graph.num_vertices),
-        wire_compression=wire, wire_value_bound=bound)
+        wire_compression=wire, wire_value_bound=bound,
+        straggler_demote=getattr(cfg, "straggler_demote", 0))
 
 
 # ======================================================================
@@ -128,9 +134,22 @@ def priority_buckets(pv: jnp.ndarray, strategy: str, scale: float) -> jnp.ndarra
 # Per-shard tick phases (operate on ONE shard's arrays)
 # ======================================================================
 def _phase1_create(prog, ep: EngineParams, values, active, cursor,
-                   row_ptr, col_idx, weights, shard_id):
+                   row_ptr, col_idx, weights, shard_id,
+                   throttle=None, demote=None):
     """Select + fetch + create + route. Returns updated (active, cursor),
-    send buffers and stats."""
+    send buffers and stats.
+
+    Crowded-cluster extras (both optional, both traced):
+      * ``throttle`` — scalar work-budget divisor for this shard (a
+        crowded machine gets through ``1/throttle`` of the per-tick edge
+        budget);
+      * ``demote`` — [vs] bool mask of frontier work activated over a
+        slow link last tick; such vertices take a bucket penalty
+        (``ep.straggler_demote``) so settled work drains first.  The
+        threshold machinery still selects them when nothing healthier
+        remains, so no vertex starves and the fixpoint cannot move
+        (selection order is covered by §3.3 reordering invariance).
+    """
     vs, M, D = ep.vs, ep.max_vertices_per_tick, ep.degree_window
     Pn, cap = ep.num_shards, ep.route_capacity
 
@@ -139,13 +158,19 @@ def _phase1_create(prog, ep: EngineParams, values, active, cursor,
     # threshold + rank-by-cumsum replaces a [vs] argsort — the paper's
     # bucketed queues never needed total order anyway.
     n_active = jnp.sum(active)
-    target = jnp.clip(jnp.ceil(ep.enforce_fraction * n_active), 1, M
+    m_eff = (M if throttle is None
+             else jnp.maximum(M // jnp.maximum(throttle, 1), 1))
+    target = jnp.clip(jnp.ceil(ep.enforce_fraction * n_active), 1, m_eff
                       ).astype(jnp.int32)
     # the aggregator orients the program's raw potential metric into an
     # ascending key (min: low value first; max/or: high value first)
     pkey = prog.aggregator.priority_key(prog.priority_value(values),
                                         ep.priority_scale)
     buckets = priority_buckets(pkey, ep.priority, ep.priority_scale)
+    if demote is not None and ep.straggler_demote:
+        buckets = jnp.where(
+            demote, jnp.minimum(buckets + ep.straggler_demote,
+                                N_BUCKETS - 1), buckets)
     hist = jnp.zeros((N_BUCKETS,), jnp.int32).at[buckets].add(
         active.astype(jnp.int32))
     cum = jnp.cumsum(hist)
@@ -283,6 +308,119 @@ def make_local_tick(prog, ep: EngineParams, weighted: bool):
 
 
 # ======================================================================
+# Crowded-cluster emulation (paper §5.4): deferred delivery + throttled
+# budgets + straggler-aware scheduling
+# ======================================================================
+class CrowdedState(NamedTuple):
+    core: EngineState
+    ring: ex_mod.DelayRing  # in-flight messages (the emulated slow wire)
+    demote: jnp.ndarray  # [P, vs] bool — frontier work to deprioritize
+
+
+class CrowdedStats(NamedTuple):
+    base: TickStats
+    pending: jnp.ndarray  # messages still in flight in the delay ring
+    shard_fetched: jnp.ndarray  # [P] edges fetched per shard this tick
+    shard_recv: jnp.ndarray  # [P] messages processed per shard this tick
+
+
+def init_crowded_state(prog, ep: EngineParams, graph: ShardedGraph,
+                       max_delay: int) -> CrowdedState:
+    return CrowdedState(
+        init_state(prog, graph),
+        ex_mod.init_delay_ring(max_delay, ep.num_shards, ep.num_shards,
+                               ep.route_capacity, prog.identity,
+                               prog.jdtype),
+        jnp.zeros((ep.num_shards, ep.vs), bool))
+
+
+def _demote_row(agg, ep: EngineParams, new_values, old_values, recv_ids,
+                slow_row):
+    """One shard's [vs] demotion mask: vertices whose value improved this
+    tick AND that were targeted by at least one message arriving over a
+    slow (delay > 0) link (``slow_row`` flags the slow receive rows).
+    Recomputed every tick (a one-tick demotion, not accumulated), so
+    repeated slow-link arrivals keep deferring the work while fresh local
+    work cannot be starved."""
+    changed = agg.improves(new_values, old_values)  # [vs]
+    idx = jnp.where((recv_ids >= 0) & slow_row[:, None], recv_ids, ep.vs)
+    slow_targets = jnp.zeros((ep.vs + 1,), bool).at[
+        idx.reshape(-1)].set(True, mode="drop")[: ep.vs]
+    return changed & slow_targets
+
+
+def _slow_recv_rows(ep: EngineParams, num_rows: int, delays):
+    """[Pn, num_rows] — for each receiver q, which delivered rows (row
+    ``l * P + p`` is sender p's ring slot l) crossed a slow link."""
+    sender = jnp.arange(num_rows, dtype=jnp.int32) % ep.num_shards
+    return (delays[sender, :] > 0).T
+
+
+def make_crowded_tick(prog, ep: EngineParams, weighted: bool):
+    """Local-transport tick under emulated crowding.
+
+    ``tick(cstate, g, delays, throttle)`` — ``delays [P, Pn]`` and
+    ``throttle [P]`` are *traced* inputs (from a ``dist.latency`` model,
+    possibly overridden per tick by fault-injected slowdowns), so the
+    cluster condition can change mid-run without recompilation.  Send
+    buffers are parked in the exchange substrate's delay ring and
+    delivered when due; convergence therefore requires BOTH an empty
+    frontier AND an empty ring (``stats.pending == 0``)."""
+    codec = wire_codec(prog, ep)
+    agg = prog.aggregator
+
+    def tick(cstate: CrowdedState, g: ShardGraph, delays, throttle):
+        state = cstate.core
+        shard_ids = jnp.arange(ep.num_shards)
+
+        def p1(values, active, cursor, row_ptr, col_idx, weights, sid,
+               thr, dem):
+            return _phase1_create(prog, ep, values, active, cursor,
+                                  row_ptr, col_idx, weights, sid,
+                                  throttle=thr, demote=dem)
+
+        w = g.weights if weighted else None
+        if w is None:
+            p1v = jax.vmap(lambda v, a, c, r, ci, s, t_, d_:
+                           p1(v, a, c, r, ci, None, s, t_, d_))
+            active, cursor, sv, si, sent, fetched = p1v(
+                state.values, state.active, state.cursor, g.row_ptr,
+                g.col_idx, shard_ids, throttle, cstate.demote)
+        else:
+            p1v = jax.vmap(p1, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0))
+            active, cursor, sv, si, sent, fetched = p1v(
+                state.values, state.active, state.cursor, g.row_ptr,
+                g.col_idx, w, shard_ids, throttle, cstate.demote)
+
+        # exchange through the deferred-delivery ring: messages from slow
+        # links surface ticks later, healthy links deliver immediately
+        rv, ri, ring, pending = ex_mod.exchange_local_delayed(
+            codec, cstate.ring, sv, si, state.tick, delays, prog.identity)
+
+        old_values = state.values
+        p2v = jax.vmap(lambda v, a, c, rvals, rids:
+                       _phase2_receive(prog, ep, v, a, c, rvals, rids))
+        values, active, cursor, accepted = p2v(state.values, active, cursor,
+                                               rv, ri)
+        if ep.straggler_demote:
+            slow_rows = _slow_recv_rows(ep, ri.shape[1], delays)
+            demote = jax.vmap(lambda nv, ov, rids, srow: _demote_row(
+                agg, ep, nv, ov, rids, srow))(values, old_values, ri,
+                                              slow_rows)
+        else:
+            demote = jnp.zeros_like(cstate.demote)
+
+        stats = TickStats(jnp.sum(active), jnp.sum(sent),
+                          jnp.sum(accepted), jnp.sum(fetched))
+        cstats = CrowdedStats(stats, pending, fetched,
+                              jnp.sum(ri >= 0, axis=(1, 2)))
+        core = EngineState(values, active, cursor, state.tick + 1)
+        return CrowdedState(core, ring, demote), cstats, (sv, si)
+
+    return jax.jit(tick)
+
+
+# ======================================================================
 # Distributed (shard_map over `workers`) execution
 # ======================================================================
 def make_dist_tick(prog, ep: EngineParams, mesh: Mesh, weighted: bool):
@@ -324,6 +462,85 @@ def make_dist_tick(prog, ep: EngineParams, mesh: Mesh, weighted: bool):
     return tick_fn
 
 
+def init_crowded_dist_state(prog, ep: EngineParams, graph: ShardedGraph,
+                            max_delay: int) -> CrowdedState:
+    """Like :func:`init_crowded_state` but with the per-shard (sender-side)
+    delay ring layout the dist transport rings: [P, ring_len, Pn, cap]."""
+    L1 = max_delay + 1
+    Pn, cap = ep.num_shards, ep.route_capacity
+    return CrowdedState(
+        init_state(prog, graph),
+        ex_mod.DelayRing(
+            jnp.full((Pn, L1, Pn, cap), prog.identity, prog.jdtype),
+            jnp.full((Pn, L1, Pn, cap), -1, jnp.int32),
+            jnp.full((Pn, L1, Pn), -1, jnp.int32)),
+        jnp.zeros((Pn, ep.vs), bool))
+
+
+def make_crowded_dist_tick(prog, ep: EngineParams, mesh: Mesh,
+                           weighted: bool):
+    """Crowded tick over ``shard_map``: the production transport with the
+    same deferred-delivery semantics (and bit-identical delivery order) as
+    :func:`make_crowded_tick` — each shard parks its own sends in a local
+    ring and ``exchange_dist_delayed`` ships due rows via ``all_to_all``.
+    ``delays [P, Pn]`` and ``throttle [P]`` ride replicated so the host
+    can inject slowdowns without recompiling."""
+    axis = "workers"
+    codec = wire_codec(prog, ep)
+    agg = prog.aggregator
+
+    def local_fn(values, active, cursor, tick, rv_ring, ri_ring, rd_ring,
+                 demote, row_ptr, col_idx, weights, delays, throttle):
+        sid = jax.lax.axis_index(axis)
+        values, active, cursor = values[0], active[0], cursor[0]
+        ring = ex_mod.DelayRing(rv_ring[0], ri_ring[0], rd_ring[0])
+        w = weights[0] if weighted else None
+        active, cursor, sv, si, sent, fetched = _phase1_create(
+            prog, ep, values, active, cursor, row_ptr[0], col_idx[0], w,
+            sid, throttle=throttle[sid], demote=demote[0])
+        rv, ri, ring, pending = ex_mod.exchange_dist_delayed(
+            codec, ring, sv, si, tick, delays[sid], axis, prog.identity)
+        old_values = values
+        values, active, cursor, accepted = _phase2_receive(
+            prog, ep, values, active, cursor, rv, ri)
+        if ep.straggler_demote:
+            srow = delays[jnp.arange(ri.shape[0], dtype=jnp.int32)
+                          % ep.num_shards, sid] > 0
+            dem = _demote_row(agg, ep, values, old_values, ri, srow)
+        else:
+            dem = jnp.zeros_like(demote[0])
+        stats = TickStats(jax.lax.psum(jnp.sum(active), axis),
+                          jax.lax.psum(sent, axis),
+                          jax.lax.psum(accepted, axis),
+                          jax.lax.psum(fetched, axis))
+        pending = jax.lax.psum(pending, axis)
+        return (values[None], active[None], cursor[None], tick + 1,
+                ring.vals[None], ring.ids[None], ring.due[None], dem[None],
+                stats, pending)
+
+    def tick_fn(cstate: CrowdedState, g: ShardGraph, delays, throttle):
+        state = cstate.core
+        Pw = P(axis)
+        sm = shard_map(
+            local_fn, mesh=mesh,
+            in_specs=(Pw, Pw, Pw, P(), Pw, Pw, Pw, Pw, Pw, Pw,
+                      Pw if weighted else P(), P(), P()),
+            out_specs=(Pw, Pw, Pw, P(), Pw, Pw, Pw, Pw,
+                       TickStats(P(), P(), P(), P()), P()),
+            check_vma=False)
+        weights = g.weights if weighted else jnp.zeros((), jnp.float32)
+        (values, active, cursor, tick, rvr, rir, rdr, demote, stats,
+         pending) = sm(state.values, state.active, state.cursor, state.tick,
+                       cstate.ring.vals, cstate.ring.ids, cstate.ring.due,
+                       cstate.demote, g.row_ptr, g.col_idx, weights,
+                       delays, throttle)
+        core = EngineState(values, active, cursor, tick)
+        return (CrowdedState(core, ex_mod.DelayRing(rvr, rir, rdr), demote),
+                stats, pending)
+
+    return tick_fn
+
+
 # ======================================================================
 # Host driver helpers
 # ======================================================================
@@ -348,23 +565,123 @@ def run_to_convergence(cfg: GraphConfig, *, graph: Optional[ShardedGraph] = None
                        prog=None, params: Optional[EngineParams] = None,
                        max_ticks: Optional[int] = None,
                        collect_log: bool = False,
-                       fault_plan=None):
-    """Host loop (the propagation phase). Returns (state, metrics dict)."""
+                       fault_plan=None, latency=None):
+    """Host loop (the propagation phase). Returns (state, metrics dict).
+
+    ``latency`` — a ``dist.latency.LatencyModel`` (or None to resolve one
+    from ``cfg.latency_profile``) switches the run onto the crowded tick:
+    messages cross the deferred-delivery ring, crowded shards get
+    throttled work budgets, and convergence additionally requires the
+    ring to drain (``totals["pending"] == 0``).  A ``fault_plan`` with
+    slowdown fields composes: the injected delays/throttles override the
+    model's for the slowdown window, without recompilation.
+    """
     from repro.core import faults as faults_mod
+    from repro.dist import latency as lat_mod
 
     graph = graph or build_sharded_graph(cfg)
     prog = prog or prog_mod.get_program(cfg)
     ep = params or default_params(cfg, graph, prog)
     g = to_device_graph(graph)
-    tick_fn = make_local_tick(prog, ep, prog.weighted)
-    state = init_state(prog, graph)
     max_ticks = cfg.max_ticks if max_ticks is None else max_ticks
+
+    if latency is None and cfg.latency_profile != "none":
+        latency = lat_mod.from_config(cfg)
+    injected = faults_mod.max_injected_delay(fault_plan)
+    crowded = latency is not None or faults_mod.injects_slowdown(fault_plan)
+    max_delay = (max(latency.max_delay if latency else 0, injected)
+                 if crowded else 0)
 
     log = []
     totals = {"ticks": 0, "sent": 0, "accepted": 0, "fetched": 0,
-              "replayed": 0, "failures": 0}
-    fault_mgr = faults_mod.FaultManager(cfg, graph, prog, ep) \
+              "replayed": 0, "failures": 0, "pending": 0}
+    # replay recovery must reach back past the checkpoint by the maximum
+    # link delay: deferred messages straddling the snapshot are otherwise
+    # in neither the restored state nor the replayed range
+    fault_mgr = faults_mod.FaultManager(cfg, graph, prog, ep,
+                                        replay_slack=max_delay) \
         if fault_plan is not None else None
+
+    # NOTE: the crowded and plain loops below mirror each other's
+    # per-tick bookkeeping (totals, log entries, fault handling, the
+    # convergence break) — keep changes to one in sync with the other
+    if crowded:
+        P_ = graph.num_shards
+        base_delays = (latency.delays if latency
+                       else np.zeros((P_, P_), np.int32))
+        base_throttle = (latency.throttle if latency
+                         else np.ones((P_,), np.int32))
+        tick_fn = make_crowded_tick(prog, ep, prog.weighted)
+        cstate = init_crowded_state(prog, ep, graph, max_delay)
+        ring_ckpt = None  # (ring, demote, tick) at the last snapshot
+        pending = 0
+        n_active = int(jnp.sum(cstate.core.active))
+        for t in range(max_ticks):
+            delays, throttle = faults_mod.apply_slowdown(
+                fault_plan, t, base_delays, base_throttle)
+            cstate, cstats, send_bufs = tick_fn(
+                cstate, g, jnp.asarray(np.minimum(delays, max_delay),
+                                       jnp.int32),
+                jnp.asarray(throttle, jnp.int32))
+            stats = cstats.base
+            n_active = int(stats.active)
+            pending = int(cstats.pending)
+            totals["ticks"] += 1
+            totals["sent"] += int(stats.sent)
+            totals["accepted"] += int(stats.accepted)
+            totals["fetched"] += int(stats.fetched)
+            if fault_mgr is not None:
+                fault_mgr.record(t, cstate.core, send_bufs)
+                if (fault_mgr.recovery == "checkpoint"
+                        and t % fault_mgr.ckpt_every == 0):
+                    # checkpoint-restore recovery rolls EVERY shard back
+                    # to the snapshot; with a delay ring the snapshot's
+                    # consistent cut must include the in-flight messages
+                    # (their senders' cursors have already advanced, so
+                    # they would never be re-sent) AND the device tick
+                    # (ring slots are keyed by tick % ring_len — resumed
+                    # pushes must reuse the original numbering or they
+                    # would collide with restored in-flight slots)
+                    ring_ckpt = (cstate.ring, cstate.demote,
+                                 cstate.core.tick)
+                core, extra = fault_mgr.maybe_fail(t, cstate.core,
+                                                   fault_plan)
+                cstate = cstate._replace(core=core)
+                if extra.get("failures") and fault_mgr.recovery == "checkpoint":
+                    if ring_ckpt is not None:
+                        ring, demote, snap_tick = ring_ckpt
+                        cstate = CrowdedState(core._replace(tick=snap_tick),
+                                              ring, demote)
+                    else:  # no snapshot yet -> run re-inits: empty ring
+                        cstate = init_crowded_state(
+                            prog, ep, graph, max_delay)._replace(
+                            core=core._replace(
+                                tick=jnp.zeros((), jnp.int32)))
+                    pending = int(jnp.sum(
+                        (cstate.ring.ids >= 0)
+                        & (cstate.ring.due >= 0)[..., None]))
+                totals["replayed"] += extra.get("replayed", 0)
+                totals["failures"] += extra.get("failures", 0)
+                if extra.get("failures"):
+                    n_active = int(jnp.sum(cstate.core.active))
+            if collect_log:
+                log.append({
+                    "tick": t, "active": n_active,
+                    "sent": int(stats.sent),
+                    "accepted": int(stats.accepted),
+                    "fetched": int(stats.fetched), "pending": pending,
+                    "shard_work": (np.asarray(cstats.shard_fetched)
+                                   + np.asarray(cstats.shard_recv)
+                                   ).tolist()})
+            if n_active == 0 and pending == 0:
+                break
+        totals["pending"] = pending
+        totals["converged"] = n_active == 0 and pending == 0
+        totals["log"] = log
+        return cstate.core, totals
+
+    tick_fn = make_local_tick(prog, ep, prog.weighted)
+    state = init_state(prog, graph)
 
     # max_ticks == 0 (or an initially empty frontier) must still report a
     # well-defined activity count after the loop

@@ -22,6 +22,15 @@ expensive, but correct without idempotence).
 
 `FaultPlan` encodes the paper's §5.5 experiments: fail x% of shards once /
 all once / all twice over the course of the run ("rolling failures").
+
+Alongside kill/replay, the plan can inject *slowdowns* (paper §5.4, the
+crowded-cluster scenario): a seeded ``slow_fraction`` of shards becomes
+crowded for a tick window — their outgoing links gain ``slow_delay``
+ticks of wire latency (routed through the exchange substrate's
+deferred-delivery ring) and their per-tick work budget is divided by
+``slow_intensity``.  Slowdowns are not failures: no state is lost, no
+recovery runs — they exercise the *scheduler's* resilience, and compose
+freely with kill/replay in the same plan.
 """
 from __future__ import annotations
 
@@ -44,6 +53,21 @@ class FaultPlan:
     every: int = 6  # ticks between rolling failure batches
     batch: int = 1  # shards failed per batch
     seed: int = 0
+    # slowdown injection (§5.4): crowd slow_fraction of the shards from
+    # slow_start until slow_stop (0 = to the end of the run)
+    slow_fraction: float = 0.0
+    slow_delay: int = 0  # extra ticks on the crowded shards' outgoing links
+    slow_intensity: int = 1  # work-budget divisor while crowded
+    slow_start: int = 0
+    slow_stop: int = 0
+
+    def slow_shards(self, num_shards: int) -> list[int]:
+        """The seeded crowded-shard choice (decorrelated from the kill
+        schedule's permutation so combined plans don't always slow the
+        same shards they kill)."""
+        k = int(round(self.slow_fraction * num_shards))
+        rng = np.random.default_rng(self.seed + 1)
+        return [int(s) for s in rng.permutation(num_shards)[:k]]
 
     def schedule(self, num_shards: int) -> dict[int, list[int]]:
         total = int(round(self.fail_fraction * num_shards))
@@ -62,8 +86,55 @@ class FaultPlan:
         return out
 
 
+def max_injected_delay(plan: Optional[FaultPlan]) -> int:
+    """The largest wire delay a plan's slowdown can inject (sizes the
+    deferred-delivery ring before the run starts)."""
+    if plan is None or plan.slow_fraction <= 0:
+        return 0
+    return max(int(plan.slow_delay), 0)
+
+
+def injects_slowdown(plan: Optional[FaultPlan]) -> bool:
+    """Does the plan crowd any shard at all — by wire delay OR by
+    work-budget throttle?  (A throttle-only plan must still route the
+    run onto the crowded tick, else the injection is a silent no-op.)"""
+    if plan is None or plan.slow_fraction <= 0:
+        return False
+    return plan.slow_delay > 0 or plan.slow_intensity > 1
+
+
+def apply_slowdown(plan: Optional[FaultPlan], t: int, delays: np.ndarray,
+                   throttle: np.ndarray
+                   ) -> tuple[np.ndarray, np.ndarray]:
+    """Overlay a plan's slowdown window onto the base cluster condition.
+
+    Inside [slow_start, slow_stop) the crowded shards' outgoing link
+    delays and work throttles are raised to the plan's values (``max``
+    against the base, never lowered); outside the window the base
+    condition passes through untouched.  Pure host-side numpy — the
+    result is fed to the crowded tick as traced arrays, so injection
+    never triggers recompilation."""
+    if (plan is None or plan.slow_fraction <= 0
+            or t < plan.slow_start
+            or (plan.slow_stop and t >= plan.slow_stop)):
+        return delays, throttle
+    # the overlay is deterministic in (plan, base) — computed once, not
+    # per tick (the host loop calls this every tick of the window)
+    cache = getattr(plan, "_overlay_cache", None)
+    if cache is None or cache[0] is not delays or cache[1] is not throttle:
+        d = delays.copy()
+        th = throttle.copy()
+        for p in plan.slow_shards(delays.shape[0]):
+            d[p, :] = np.maximum(d[p, :], plan.slow_delay)
+            th[p] = max(int(th[p]), int(plan.slow_intensity))
+        cache = (delays, throttle, d, th)
+        plan._overlay_cache = cache
+    return cache[2], cache[3]
+
+
 class FaultManager:
-    def __init__(self, cfg: GraphConfig, graph, prog, ep: EngineParams):
+    def __init__(self, cfg: GraphConfig, graph, prog, ep: EngineParams,
+                 replay_slack: int = 0):
         self.cfg, self.graph, self.prog, self.ep = cfg, graph, prog, ep
         # replay recovery re-delivers (duplicates) messages — legal only
         # under the §3.3 idempotence precondition
@@ -71,6 +142,12 @@ class FaultManager:
                          else "checkpoint")
         self.ckpt_every = cfg.checkpoint_every
         self.log_ticks = cfg.replay_log_ticks
+        # crowded runs: a message produced BEFORE a shard's checkpoint can
+        # be delivered AFTER it (deferred delivery), so it is in neither
+        # the snapshot nor the naive since+1..t replay range — widen the
+        # replayed window by the maximum link delay (duplicates are safe
+        # by idempotence; zero for immediate-delivery runs)
+        self.replay_slack = replay_slack
         # per-shard checkpoint: tick -> (values, active, cursor) rows
         self.ckpt_tick = np.full(graph.num_shards, -1, np.int64)
         self.ckpt: dict[int, tuple] = {}
@@ -90,8 +167,10 @@ class FaultManager:
         if self.recovery == "replay":  # checkpoint mode never reads the log
             sv, si = send_bufs
             self.msg_log[t] = (np.asarray(sv), np.asarray(si))
+            # retention must cover the slack-widened replay window, or
+            # crowded runs would always fall to the boundary fallback
             for old in list(self.msg_log):
-                if old < t - self.log_ticks:
+                if old < t - (self.log_ticks + self.replay_slack):
                     del self.msg_log[old]
 
     # ------------------------------------------------------------------
@@ -136,9 +215,12 @@ class FaultManager:
             cursor[p] = 0
             since = -1
 
-        # (3) request lost messages
+        # (3) request lost messages — every production tick whose
+        # delivery could postdate the snapshot (replay_slack covers
+        # messages that were still in flight at checkpoint time)
         replayed = 0
-        lost = [tt for tt in range(since + 1, t + 1)]
+        lost = [tt for tt in range(max(since + 1 - self.replay_slack, 0),
+                                   t + 1)]
         if lost and all(tt in self.msg_log for tt in lost):
             for tt in lost:
                 sv, si = self.msg_log[tt]
@@ -170,8 +252,14 @@ class FaultManager:
     def _global_restore(self, state: EngineState) -> EngineState:
         """BSP-style recovery for non-idempotent programs: EVERY shard
         rolls back to the last (globally consistent) snapshot — snapshots
-        are taken between host-loop ticks, so no messages are in flight at
-        the restore point.  With no snapshot yet, re-initialize the run."""
+        are taken between host-loop ticks, so for the immediate-delivery
+        transports no messages are in flight at the restore point.  Under
+        deferred delivery that premise fails: the caller must restore the
+        DelayRing AND the device tick (which keys the ring slots) from
+        the same snapshot instant, as ``run_to_convergence``'s crowded
+        loop does — restoring state alone would drop parked messages
+        whose senders' cursors have already advanced.  With no snapshot
+        yet, re-initialize the run."""
         if not self.ckpt:
             return init_state(self.prog, self.graph)._replace(tick=state.tick)
         P_ = self.graph.num_shards

@@ -16,6 +16,12 @@ Two consumers, one toolbox:
     the lossy round-trip on both sides of the fixpoint).
 
 All functions are pure jnp and jit/shard_map-traceable.
+
+Layer contract: this module sits in ``repro.dist``, *below* ``repro.core``
+and ``repro.models`` — it imports only jax/numpy and may never import
+from the layers above it; ``repro.dist.exchange`` is its only in-package
+consumer, and the quantize *direction* is always chosen by the caller
+(ultimately the program's Aggregator), never guessed here.
 """
 from __future__ import annotations
 

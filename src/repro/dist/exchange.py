@@ -27,11 +27,29 @@ Both run the *same* wire codec so their results are bit-identical:
 ``effective_compression`` is the gate: a requested mode that cannot be
 carried safely (e.g. int16 labels on a 10^6-vertex graph) falls back to
 ``none`` rather than produce wrong fixpoints.
+
+**Deferred delivery (crowded-cluster emulation).**  Both transports also
+come in a *delayed* flavour (:func:`exchange_local_delayed` /
+:func:`exchange_dist_delayed`) that consults a per-link delay matrix from
+``repro.dist.latency``: a send buffer produced at tick ``t`` for link
+``p -> q`` is parked in a :class:`DelayRing` and delivered at tick
+``t + delays[p, q]``.  The ring is indexed by *send* tick modulo its
+length, with an explicit per-row due tick, so arbitrary time-varying
+delays (fault-injected slowdowns that start and stop mid-run) can never
+overwrite an in-flight message — a slot is only reused ``ring_len`` ticks
+after it was written, by which time its occupant (delay <= ring_len - 1)
+has been delivered.  Messages are never dropped, only deferred, so the
+§3.3 self-stabilization argument (fixpoint invariant under delay and
+reordering) applies and delayed runs converge to bit-identical fixpoints.
+
+Layer contract: ``repro.dist`` sits below ``repro.core`` and
+``repro.models``; this module imports only ``repro.dist`` siblings
+(``compression``) and must never import from the layers above it.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -168,3 +186,107 @@ def exchange_dist(codec: WireCodec, send_vals: jnp.ndarray,
     ri = a2a(codec.encode_ids(send_ids))
     rs = a2a(scales) if scales is not None else None
     return codec.decode(rv, rs), codec.decode_ids(ri)
+
+
+# ======================================================================
+# Deferred delivery (crowded-cluster emulation — see module docstring)
+# ======================================================================
+class DelayRing(NamedTuple):
+    """In-flight message store for the delayed transports.
+
+    Local mode shapes: ``vals/ids [ring_len, P, Pn, cap]``,
+    ``due [ring_len, P, Pn]``; dist mode drops the sender axis
+    (each shard rings only its own sends): ``vals/ids
+    [ring_len, Pn, cap]``, ``due [ring_len, Pn]``.  ``due == -1``
+    marks an empty (or already-delivered) row."""
+
+    vals: jnp.ndarray
+    ids: jnp.ndarray
+    due: jnp.ndarray
+
+
+def init_delay_ring(max_delay: int, num_senders: int, num_shards: int,
+                    capacity: int, identity, dtype) -> DelayRing:
+    """An empty ring able to carry any per-link delay <= ``max_delay``.
+
+    ``num_senders`` is ``P`` for the local transport (all shards in one
+    array) and ``0`` for the per-shard dist transport (sender axis
+    dropped)."""
+    L1 = max_delay + 1
+    lead = (L1, num_senders) if num_senders else (L1,)
+    return DelayRing(
+        jnp.full(lead + (num_shards, capacity), identity, dtype),
+        jnp.full(lead + (num_shards, capacity), -1, jnp.int32),
+        jnp.full(lead + (num_shards,), -1, jnp.int32))
+
+
+def _ring_push_pop(ring: DelayRing, send_vals, send_ids, tick, delays,
+                   identity):
+    """Shared ring mechanics: park this tick's sends, surface every row
+    whose due tick has arrived (masked to empty otherwise), retire it.
+
+    Returns ``(deliver_vals, deliver_ids, ring', pending)`` where the
+    deliverables keep the full ring extent (leading ``ring_len`` axis) —
+    non-due rows carry the aggregation identity and ids of -1, which the
+    receive phase drops, so delivery shape stays static under jit."""
+    L1 = ring.vals.shape[0]
+    slot = tick % L1
+    vals = ring.vals.at[slot].set(send_vals)
+    ids = ring.ids.at[slot].set(send_ids)
+    due = ring.due.at[slot].set(tick + jnp.minimum(delays, L1 - 1))
+    ready = (due >= 0) & (due <= tick)
+    dv = jnp.where(ready[..., None], vals, jnp.asarray(identity, vals.dtype))
+    di = jnp.where(ready[..., None], ids, -1)
+    due = jnp.where(ready, -1, due)
+    pending = jnp.sum((ids >= 0) & (due >= 0)[..., None])
+    return dv, di, DelayRing(vals, ids, due), pending
+
+
+def exchange_local_delayed(codec: WireCodec, ring: DelayRing,
+                           send_vals: jnp.ndarray, send_ids: jnp.ndarray,
+                           tick, delays, identity
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray, DelayRing,
+                                      jnp.ndarray]:
+    """Deferred-delivery local transport.
+
+    ``send_vals/send_ids [P, Pn, cap]`` are parked in ``ring`` and every
+    due row is delivered through the same wire codec as the immediate
+    transport: receiver ``q`` gets ``[ring_len * P, cap]`` buffers whose
+    row ``l * P + p`` is sender ``p``'s buffer from ring slot ``l`` (empty
+    rows carry ids of -1).  ``delays [P, Pn]`` may change tick to tick
+    (fault-injected slowdowns); values above the ring's capacity clamp.
+    Returns ``(recv_vals, recv_ids, ring', pending)`` with ``pending`` =
+    messages still in flight after this delivery."""
+    dv, di, ring, pending = _ring_push_pop(ring, send_vals, send_ids, tick,
+                                           delays, identity)
+    L1, P_ = dv.shape[0], dv.shape[1]
+    rv, ri = exchange_local(codec, dv.reshape((L1 * P_,) + dv.shape[2:]),
+                            di.reshape((L1 * P_,) + di.shape[2:]))
+    return rv, ri, ring, pending
+
+
+def exchange_dist_delayed(codec: WireCodec, ring: DelayRing,
+                          send_vals: jnp.ndarray, send_ids: jnp.ndarray,
+                          tick, delays_row, axis_name: str, identity
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray, DelayRing,
+                                     jnp.ndarray]:
+    """Deferred-delivery dist transport (sender-side ring, must run inside
+    ``shard_map``).
+
+    Each shard parks its own ``[Pn, cap]`` sends (``delays_row [Pn]`` is
+    its outgoing row of the delay matrix) and ships every due row through
+    ``all_to_all`` each tick, so receive shapes stay static: the result is
+    ``[ring_len * Pn, cap]`` with row ``l * Pn + q`` = sender ``q``'s ring
+    slot ``l`` — the same row order (and the same codec arithmetic, hence
+    bit-identical delivery) as :func:`exchange_local_delayed`."""
+    dv, di, ring, pending = _ring_push_pop(ring, send_vals, send_ids, tick,
+                                           delays_row, identity)
+    a2a = lambda x: jax.lax.all_to_all(x, axis_name, 1, 1, tiled=True)
+    enc_v, scales = codec.encode(dv)
+    rv = a2a(enc_v)
+    ri = a2a(codec.encode_ids(di))
+    rs = a2a(scales) if scales is not None else None
+    rv, ri = codec.decode(rv, rs), codec.decode_ids(ri)
+    L1, Pn = rv.shape[0], rv.shape[1]
+    return (rv.reshape((L1 * Pn,) + rv.shape[2:]),
+            ri.reshape((L1 * Pn,) + ri.shape[2:]), ring, pending)

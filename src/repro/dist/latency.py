@@ -1,0 +1,123 @@
+"""Per-link / per-shard latency models for crowded-cluster emulation.
+
+Layer contract: this module sits in ``repro.dist`` — *below* ``repro.core``
+and ``repro.models`` — and must stay import-cycle-free: it imports only
+numpy and is consumed by ``repro.dist.exchange`` (the deferred-delivery
+ring) and ``repro.core.engine`` (budget throttling, straggler-aware
+scheduling).  Nothing here may import from ``repro.core`` or above.
+
+A :class:`LatencyModel` describes one emulated cluster condition
+(paper §5.4: "What happens when 50% of the machines are crowded?") as two
+deterministic, seedable arrays:
+
+  * ``delays [P, P]``  — extra ticks a message from sender shard ``p`` to
+    receiver shard ``q`` spends on the wire.  The exchange substrate's
+    deferred-delivery ring (``exchange.exchange_local_delayed`` /
+    ``exchange_dist_delayed``) consults this to defer delivery; a slow
+    *machine* is modeled as delay on all of its outgoing links (its
+    messages reach peers late).
+  * ``throttle [P]``   — per-shard work-budget divisor: a shard with
+    throttle ``k`` selects/streams ``1/k`` of the normal per-tick edge
+    budget, emulating a machine that gets through ``k``x less work per
+    unit of wall-clock.  Healthy shards have throttle 1.
+
+Both arrays are pure functions of ``(profile, num_shards, knobs, seed)``,
+so two runs of the same config see bit-identical cluster conditions —
+which is what lets the benchmark suite compare scheduling policies under
+*the same* emulated crowding, and lets the test suite assert that the
+converged fixpoint is bit-identical to the zero-latency run (the §3.3
+self-stabilization guarantee, now exercised under delayed and reordered
+delivery).
+
+Profiles:
+
+  * ``none``        — zero delay, unit throttle (the healthy cluster).
+  * ``uniform``     — every link carries ``link_delay`` ticks, no shard
+    is compute-throttled (pure network latency).
+  * ``stragglers``  — a seeded ``slow_fraction`` of shards is *crowded*:
+    their outgoing links carry ``link_delay`` ticks and their work budget
+    is divided by ``intensity`` (the paper's §5.4 scenario).
+  * ``heavy_tail``  — per-shard severity drawn from a seeded Zipf
+    distribution: most shards are healthy, a few are badly crowded
+    (the realistic shared-cluster shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+PROFILES = ("none", "uniform", "stragglers", "heavy_tail")
+
+# heavy_tail severities are capped so the deferred-delivery ring (sized
+# max_delay + 1 slots) stays small
+_HEAVY_TAIL_DELAY_CAP = 6
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class LatencyModel:
+    """One emulated cluster condition (deterministic in its inputs)."""
+
+    profile: str
+    num_shards: int
+    delays: np.ndarray  # [P, P] int32 — sender -> receiver extra ticks
+    throttle: np.ndarray  # [P] int32 — per-shard work-budget divisor (>= 1)
+    slow_mask: np.ndarray  # [P] bool — which shards are crowded
+    seed: int = 0
+
+    @property
+    def max_delay(self) -> int:
+        """Ring size the deferred-delivery buffer needs (slots - 1)."""
+        return int(self.delays.max(initial=0))
+
+    def describe(self) -> str:
+        return (f"{self.profile}(slow={int(self.slow_mask.sum())}/"
+                f"{self.num_shards}, max_delay={self.max_delay}, "
+                f"max_throttle={int(self.throttle.max(initial=1))})")
+
+
+def make_latency_model(profile: str, num_shards: int, *,
+                       slow_fraction: float = 0.5, link_delay: int = 2,
+                       intensity: int = 4, seed: int = 0) -> LatencyModel:
+    """Build a deterministic latency model for one emulated condition.
+
+    ``slow_fraction`` — fraction of shards crowded (stragglers profile);
+    ``link_delay``    — wire delay in ticks on affected links;
+    ``intensity``     — work-budget divisor for crowded shards.
+    """
+    if profile not in PROFILES:
+        raise ValueError(f"unknown latency profile {profile!r}; "
+                         f"known: {PROFILES}")
+    P = num_shards
+    delays = np.zeros((P, P), np.int32)
+    throttle = np.ones((P,), np.int32)
+    slow = np.zeros((P,), bool)
+    if profile == "uniform":
+        delays[:, :] = max(int(link_delay), 0)
+    elif profile == "stragglers":
+        k = int(round(slow_fraction * P))
+        rng = np.random.default_rng(seed)
+        slow[rng.permutation(P)[:k]] = True
+        delays[slow, :] = max(int(link_delay), 0)
+        throttle[slow] = max(int(intensity), 1)
+    elif profile == "heavy_tail":
+        rng = np.random.default_rng(seed)
+        # Zipf(2) - 1: mostly zeros, occasionally large — cap both tails
+        sev = np.minimum(rng.zipf(2.0, size=P) - 1,
+                         max(int(intensity), 1)).astype(np.int32)
+        slow = sev > 0
+        delays[slow, :] = np.minimum(sev[slow], _HEAVY_TAIL_DELAY_CAP
+                                     )[:, None]
+        throttle = np.maximum(1 + sev, 1).astype(np.int32)
+    return LatencyModel(profile=profile, num_shards=P, delays=delays,
+                        throttle=throttle, slow_mask=slow, seed=seed)
+
+
+def from_config(cfg) -> LatencyModel:
+    """Resolve a :class:`LatencyModel` from a ``GraphConfig``'s emulation
+    knobs (``latency_profile`` / ``slow_fraction`` / ``link_delay`` /
+    ``slow_intensity`` / ``latency_seed``)."""
+    return make_latency_model(
+        cfg.latency_profile, cfg.num_shards,
+        slow_fraction=cfg.slow_fraction, link_delay=cfg.link_delay,
+        intensity=cfg.slow_intensity, seed=cfg.latency_seed)

@@ -21,6 +21,11 @@ A tiny context (:func:`use_mesh_rules` / :func:`current_mesh` /
 :func:`shard`) lets model code state *logical* constraints and stay
 mesh-agnostic: outside a mesh context ``shard`` is the identity, so tests
 and single-device examples run the same code the 256-chip dry-run lowers.
+
+Layer contract: this module sits in ``repro.dist``, *below*
+``repro.core`` and ``repro.models`` — it imports only jax/numpy and may
+never import from the layers above it (they call down into it: the graph
+builder, elastic resize and dry-run all resolve shards here).
 """
 from __future__ import annotations
 

@@ -7,6 +7,8 @@ per-tick metrics log.
   python -m repro.launch.graph_mine --config asymp_cc [--failures 0.5]
   python -m repro.launch.graph_mine --config asymp_sssp --out /tmp/sssp.tsv
   python -m repro.launch.graph_mine --algorithm widest_path --source 7
+  python -m repro.launch.graph_mine --config asymp_cc --slowdown 0.5 \
+      --latency-profile stragglers      # crowded-cluster emulation (§5.4)
 """
 from __future__ import annotations
 
@@ -21,6 +23,7 @@ from repro.core import graph as G
 from repro.core import merger
 from repro.core import programs as PR
 from repro.core.faults import FaultPlan
+from repro.dist import latency as lat_mod
 
 
 def main() -> None:
@@ -35,6 +38,20 @@ def main() -> None:
                     help="fraction of shards to fail (0.5/1.0/2.0)")
     ap.add_argument("--priority", default=None)
     ap.add_argument("--enforce", type=float, default=None)
+    ap.add_argument("--latency-profile", default=None,
+                    choices=sorted(lat_mod.PROFILES),
+                    help="crowded-cluster emulation profile (§5.4; "
+                         "dist/latency.py)")
+    ap.add_argument("--slowdown", type=float, default=None,
+                    help="fraction of shards crowded (implies "
+                         "--latency-profile stragglers unless given)")
+    ap.add_argument("--link-delay", type=int, default=None,
+                    help="extra wire ticks on a crowded shard's links")
+    ap.add_argument("--intensity", type=int, default=None,
+                    help="work-budget divisor for crowded shards")
+    ap.add_argument("--reduced", action="store_true",
+                    help="run the config's tiny .reduced() variant "
+                         "(CI smoke)")
     ap.add_argument("--out", default="")
     ap.add_argument("--metrics", default="")
     args = ap.parse_args()
@@ -50,8 +67,20 @@ def main() -> None:
         kw["algorithm"] = args.algorithm
     if args.source is not None:
         kw["source"] = args.source
+    if args.slowdown is not None:
+        kw["slow_fraction"] = args.slowdown
+        if args.latency_profile is None and cfg.latency_profile == "none":
+            kw["latency_profile"] = "stragglers"
+    if args.latency_profile is not None:
+        kw["latency_profile"] = args.latency_profile
+    if args.link_delay is not None:
+        kw["link_delay"] = args.link_delay
+    if args.intensity is not None:
+        kw["slow_intensity"] = args.intensity
     if kw:
         cfg = dataclasses.replace(cfg, **kw)
+    if args.reduced:
+        cfg = cfg.reduced()
     prog = PR.get_program(cfg)
     if prog.weighted and not cfg.weighted:
         # weighted programs need edge weights on the graph
@@ -69,6 +98,10 @@ def main() -> None:
 
     plan = (FaultPlan(fail_fraction=args.failures, start_tick=4, every=6)
             if args.failures > 0 else None)
+    if cfg.latency_profile != "none":
+        print(f"[graph_mine] crowded-cluster emulation: "
+              f"{lat_mod.from_config(cfg).describe()} "
+              f"(straggler_demote={cfg.straggler_demote})")
     t0 = time.time()
     state, totals = E.run_to_convergence(cfg, graph=graph, prog=prog,
                                          fault_plan=plan, collect_log=True)

@@ -1,0 +1,50 @@
+"""Docs integrity: the link checker must pass (no dangling markdown
+links or file-path references in README.md / docs/*.md), and the two
+architecture/reproduction guides the README promises must exist and
+cross-link each other."""
+import importlib.util
+import pathlib
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs_links", REPO / "tools" / "check_docs_links.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_no_dangling_links_or_paths():
+    mod = _checker()
+    errors = [e for f in mod.doc_files() for e in mod.check(f)]
+    assert not errors, "\n".join(errors)
+
+
+def test_required_docs_exist_and_are_linked():
+    arch = REPO / "docs" / "ARCHITECTURE.md"
+    repro = REPO / "docs" / "REPRODUCTION.md"
+    readme = (REPO / "README.md").read_text()
+    assert arch.exists() and repro.exists()
+    assert "docs/ARCHITECTURE.md" in readme
+    assert "docs/REPRODUCTION.md" in readme
+    # the guides cross-reference each other
+    assert "REPRODUCTION.md" in arch.read_text()
+    assert "ARCHITECTURE.md" in repro.read_text()
+
+
+def test_reproduction_commands_match_ci():
+    """Every command REPRODUCTION.md lists under "What CI runs" must
+    literally appear in the CI workflow (so the docs can't drift from
+    what is actually executed)."""
+    repro = (REPO / "docs" / "REPRODUCTION.md").read_text()
+    ci = (REPO / ".github" / "workflows" / "ci.yml").read_text()
+    section = repro.split("## What CI runs", 1)[1]
+    block = section.split("```bash", 1)[1].split("```", 1)[0]
+    cmds = [ln.split("#", 1)[0].strip() for ln in block.splitlines()]
+    cmds = [c for c in cmds if c]
+    assert cmds, "no commands found in the What-CI-runs section"
+    for cmd in cmds:
+        # CI spells the env var inline the same way the docs do
+        assert cmd in ci, f"doc command not executed by CI: {cmd}"

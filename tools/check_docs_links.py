@@ -1,0 +1,70 @@
+#!/usr/bin/env python3
+"""Docs link checker: every relative markdown link in README.md and
+docs/*.md must resolve to a real file, and every file/module path the
+docs mention in backticks must exist — so cross-references can't rot.
+
+Run from anywhere (paths resolve against the repo root):
+
+    python tools/check_docs_links.py
+
+Exit status 0 = all links resolve; 1 = at least one dangling reference
+(each one printed).  CI runs this on every push; the tier-1 suite runs
+the same checks via ``tests/test_docs.py``.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# [text](target) — skip external schemes and in-page anchors
+_MD_LINK = re.compile(r"\[[^\]]+\]\(([^)#\s]+)(?:#[^)]*)?\)")
+# `path/like.this` or `path/like.py` mentions inside backticks
+_CODE_PATH = re.compile(r"`([A-Za-z0-9_./-]+\.(?:py|md|yml|txt))`")
+
+
+def doc_files() -> list[Path]:
+    files = [REPO / "README.md"]
+    files += sorted((REPO / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def check(path: Path) -> list[str]:
+    errors = []
+    text = path.read_text()
+    for m in _MD_LINK.finditer(text):
+        target = m.group(1)
+        if "://" in target or target.startswith("mailto:"):
+            continue
+        resolved = (path.parent / target).resolve()
+        if not resolved.exists():
+            errors.append(f"{path.relative_to(REPO)}: dangling link "
+                          f"-> {target}")
+    for m in _CODE_PATH.finditer(text):
+        target = m.group(1)
+        if "/" not in target:  # bare filenames are prose, not paths
+            continue
+        # docs name python files by their import-style location
+        # (`repro/core/engine.py`, `launch/dryrun.py`) — resolve against
+        # the repo root, the doc's directory, and the src layout
+        roots = (REPO, path.parent, REPO / "src", REPO / "src" / "repro")
+        if not any((r / target).exists() for r in roots):
+            errors.append(f"{path.relative_to(REPO)}: dangling path "
+                          f"reference -> `{target}`")
+    return errors
+
+
+def main() -> int:
+    files = doc_files()
+    errors = [e for f in files for e in check(f)]
+    for e in errors:
+        print(f"[check_docs_links] {e}", file=sys.stderr)
+    print(f"[check_docs_links] {len(files)} files checked, "
+          f"{len(errors)} dangling references")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
