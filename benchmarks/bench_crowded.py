@@ -89,16 +89,23 @@ def degradation(cfg: GraphConfig, graph, crowded_kw=CROWDED) -> dict:
 
 # ======================================================================
 def _tiny_cfg(algorithm: str) -> GraphConfig:
+    # pagerank runs a smaller graph: residual push needs
+    # ~log(1/eps)/log(1/d) visits per vertex
+    n = 256 if algorithm == "pagerank" else 512
+    deg = 4 if algorithm == "pagerank" else 5
     return GraphConfig(
-        name=f"tiny-{algorithm}", algorithm=algorithm, num_vertices=512,
-        avg_degree=5, generator="rmat", num_shards=4, enforce_fraction=0.5,
-        weighted=algorithm in ("sssp", "widest_path"))
+        name=f"tiny-{algorithm}", algorithm=algorithm, num_vertices=n,
+        avg_degree=deg, generator="rmat", num_shards=4,
+        enforce_fraction=0.5, weighted=algorithm in ("sssp", "widest_path"))
 
 
 def check_fixpoint_invariance(verbose: bool = True) -> None:
     """Every registered program x every latency profile: the converged
     output must be bit-identical to the zero-latency run (§3.3
-    self-stabilization, exercised under delay + reordering)."""
+    self-stabilization, exercised under delay + reordering).  The
+    non-idempotent pagerank has no bitwise claim (reordered float (+)
+    moves low bits) but its exactly-once delivery bounds the drift by
+    the push_eps error ball."""
     for name in sorted(PR.PROGRAMS):
         cfg = _tiny_cfg(name)
         g = G.build_sharded_graph(cfg)
@@ -113,20 +120,31 @@ def check_fixpoint_invariance(verbose: bool = True) -> None:
             _, s, tot = run_asymp(cfg, graph=g, latency=lat)
             out = merger.extract(s, g, prog)
             assert tot["converged"], (name, profile)
-            assert (np.asarray(out) == np.asarray(base)).all(), \
-                f"fixpoint drifted: {name} under {profile}"
+            if prog.aggregator.idempotent:
+                assert (np.asarray(out) == np.asarray(base)).all(), \
+                    f"fixpoint drifted: {name} under {profile}"
+                note = "identical=True"
+            else:
+                n_real = g.num_real_vertices
+                l1 = float(np.abs(np.asarray(out, np.float64) / n_real
+                                  - np.asarray(base, np.float64)
+                                  / n_real).sum())
+                bound = 2 * prog.push_eps / (1 - 0.85)
+                assert l1 < bound, \
+                    f"fixpoint drifted: {name} under {profile} (L1={l1:.2e})"
+                note = f"l1={l1:.2e}<bound={bound:.1e}"
             if verbose:
                 emit(f"crowded/fixpoint/{name}/{profile}",
-                     tot["wall_s"] * 1e6,
-                     f"ticks={tot['ticks']};identical=True")
+                     tot["wall_s"] * 1e6, f"ticks={tot['ticks']};{note}")
 
 
 def smoke() -> None:
     """CI gate for the §5.4 shape (deterministic: seeded graph, seeded
     profiles — a failure means the engine or scheduler regressed)."""
     check_fixpoint_invariance(verbose=False)
-    print("== smoke: fixpoints bit-identical under every latency profile "
-          f"for all {len(PR.PROGRAMS)} registered programs ==")
+    print("== smoke: fixpoints invariant under every latency profile "
+          f"for all {len(PR.PROGRAMS)} registered programs "
+          "(bit-identical for idempotent aggregators) ==")
 
     cfg = _scenario_cfg("sssp")
     g = G.build_sharded_graph(cfg)

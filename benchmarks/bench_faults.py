@@ -1,5 +1,8 @@
-"""Paper Fig 9a: fault tolerance — runtime factor vs failure volume
-(50% / 100% / 200% of shards, rolling) + slow-shard (straggler) scenario.
+"""Paper Fig 9a / §5.5: fault tolerance — runtime factor vs failure
+volume (50% / 100% / 200% of shards, rolling) on BOTH recovery paths:
+replay (idempotent programs: CC) and globally consistent checkpoint
+restore (non-idempotent SUM aggregation: residual-push PageRank) —
+plus the slow-shard (straggler) scenario.
 
     PYTHONPATH=src python -m benchmarks.bench_faults          # figure
     PYTHONPATH=src python -m benchmarks.bench_faults --smoke  # CI gate
@@ -8,16 +11,49 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from benchmarks.common import emit, run_asymp
 from repro.configs.base import GraphConfig
 from repro.core import engine as E
 from repro.core import graph as G
-from repro.core.faults import FaultPlan
+from repro.core import merger
+from repro.core import programs as PR
+from repro.core.faults import FaultManager, FaultPlan
+
+
+def _pagerank_cfg(log2n: int) -> GraphConfig:
+    return GraphConfig(name=f"rmat{log2n}-pr", algorithm="pagerank",
+                       num_vertices=1 << log2n, avg_degree=8,
+                       generator="rmat", num_shards=8, priority="log",
+                       enforce_fraction=0.5, checkpoint_every=4)
+
+
+def _pagerank_verdict(cfg, g, state, totals):
+    """The acceptance checks for one pagerank run: converged to the
+    dense pull-mode oracle (absorb-dangling convention, normalized L1)
+    and conserved probability mass (the exactly-once witness, via the
+    merger phase's per-tick invariant)."""
+    from repro.kernels.ops import pagerank as dense_pagerank
+    prog = PR.get_program(cfg)
+    n = g.num_real_vertices
+    out = merger.extract(state, g, prog)
+    oracle = np.asarray(dense_pagerank(g, damping=cfg.damping, iters=80,
+                                       use_kernel=False, dangling="absorb"))
+    l1 = float(np.abs(out.astype(np.float64) / n - oracle).sum())
+    mass = merger.mass_balance(state, g, cfg.damping)
+    assert totals["converged"]
+    assert l1 < 1e-3, f"pagerank drifted from the oracle (L1={l1:.2e})"
+    assert abs(mass - 1.0) < 1e-5, f"mass not conserved ({mass:.8f})"
+    return l1, mass
 
 
 def smoke() -> None:
-    """CI gate: failing every shard once (rolling) must recover through
-    replay and converge with a bounded tick overhead."""
+    """CI gate, both recovery paths: failing every shard once (rolling)
+    must recover through replay (CC) with bounded tick overhead, and the
+    non-idempotent pagerank program under a 50% kill plan must take
+    checkpoint restore (zero replays) and still hit the oracle fixpoint
+    with conserved mass."""
     cfg = GraphConfig(name="rmat12", algorithm="cc", num_vertices=1 << 12,
                       avg_degree=16, generator="rmat", num_shards=8,
                       priority="log", enforce_fraction=0.1,
@@ -35,6 +71,27 @@ def smoke() -> None:
     assert tot["replayed"] > 0, "smoke: recovery never exercised replay"
     assert overhead < 3.0, f"smoke: failure overhead blew up ({overhead:.2f}x)"
     print(f"== smoke OK: 100% rolling failures, {overhead:.2f}x ticks ==")
+
+    # ---- checkpoint-restore path (§5.5 on the second recovery branch) ----
+    cfg_pr = _pagerank_cfg(10)
+    g_pr = G.build_sharded_graph(cfg_pr)
+    prog = PR.get_program(cfg_pr)
+    assert FaultManager(cfg_pr, g_pr, prog,
+                        E.default_params(cfg_pr, g_pr, prog)
+                        ).recovery == "checkpoint"
+    _, _, base_pr = run_asymp(cfg_pr, graph=g_pr)
+    plan = FaultPlan(fail_fraction=0.5, start_tick=4, every=6)
+    _, state, tot = run_asymp(cfg_pr, graph=g_pr, fault_plan=plan)
+    overhead = tot["ticks"] / base_pr["ticks"]
+    l1, mass = _pagerank_verdict(cfg_pr, g_pr, state, tot)
+    emit("smoke/fig9a/ckpt_restore_fail50", tot["wall_s"] * 1e6,
+         f"failures={tot['failures']};replayed={tot['replayed']};"
+         f"tick_overhead_x={overhead:.2f};l1={l1:.2e};mass={mass:.8f}")
+    assert tot["failures"] > 0, "smoke: checkpoint path never exercised"
+    assert tot["replayed"] == 0, "smoke: non-idempotent program replayed"
+    print(f"== smoke OK: pagerank checkpoint restore, "
+          f"{tot['failures']} failures, {overhead:.2f}x ticks, "
+          f"L1={l1:.1e}, mass={mass:.6f} ==")
 
 
 def main() -> None:
@@ -66,6 +123,24 @@ def main() -> None:
     emit("fig9a/straggler_budget_div8", tot["wall_s"] * 1e6,
          f"ticks={tot['ticks']};tick_overhead_x="
          f"{tot['ticks'] / base['ticks']:.2f}")
+
+    # ---- §5.5 degradation on the checkpoint-restore path (pagerank) ----
+    print("== Fig 9a (checkpoint-restore path): pagerank, rmat12, "
+          "8 shards ==")
+    cfg_pr = _pagerank_cfg(12)
+    g_pr = G.build_sharded_graph(cfg_pr)
+    _, _, base_pr = run_asymp(cfg_pr, graph=g_pr)
+    emit("fig9a/ckpt/fail0", base_pr["wall_s"] * 1e6,
+         f"ticks={base_pr['ticks']};messages={base_pr['sent']}")
+    for frac in (0.5, 1.0, 2.0):
+        plan = FaultPlan(fail_fraction=frac, start_tick=4, every=5)
+        _, state, tot = run_asymp(cfg_pr, graph=g_pr, fault_plan=plan)
+        l1, mass = _pagerank_verdict(cfg_pr, g_pr, state, tot)
+        emit(f"fig9a/ckpt/fail{int(frac * 100)}", tot["wall_s"] * 1e6,
+             f"ticks={tot['ticks']};"
+             f"tick_overhead_x={tot['ticks'] / base_pr['ticks']:.2f};"
+             f"failures={tot['failures']};replayed={tot['replayed']};"
+             f"l1={l1:.2e};mass={mass:.8f}")
 
 
 if __name__ == "__main__":

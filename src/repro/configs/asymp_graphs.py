@@ -50,6 +50,13 @@ CONFIGS: dict[str, GraphConfig] = {
     "asymp_labelprop": rmat(16, algorithm="labelprop"),
     "asymp_labelprop_wire": rmat(14, algorithm="labelprop",
                                  wire_compression="int16"),
+    # non-idempotent accumulation (SUM aggregator): residual-push
+    # PageRank.  Replay recovery is refused — failures take the globally
+    # consistent checkpoint-restore path — and any requested
+    # wire_compression is gated to "none" (quantization error compounds
+    # under (+)); frequent snapshots keep the rollback window short
+    "asymp_pagerank": rmat(14, algorithm="pagerank", avg_degree=16,
+                           enforce_fraction=0.5, checkpoint_every=4),
     # crowded-cluster emulation (paper §5.4, dist/latency.py): half the
     # shards crowded — outgoing links gain 2 wire ticks, work budget /4;
     # the priority scheduler keeps the degradation well under 2x

@@ -295,6 +295,8 @@ class GraphConfig:
     # source vertex for single-source programs (sssp/bfs/reachability/
     # widest_path); ignored by the others
     source: int = 0
+    # damping factor for pagerank; ignored by the others
+    damping: float = 0.85
 
     @property
     def num_edges(self) -> int:

@@ -45,6 +45,12 @@ class EngineState(NamedTuple):
     active: jnp.ndarray  # [P, vs] bool
     cursor: jnp.ndarray  # [P, vs] int32 — adjacency streaming position
     tick: jnp.ndarray  # scalar int32
+    # push-mode sidecar planes [P, aux_channels, vs] (None for idempotent
+    # programs): aux[:, 0] = residual (receive-side accumulation),
+    # aux[:, 1] = latched mass mid-push.  Checkpoints, elastic resize and
+    # fault restore must carry it with values/active/cursor — it IS
+    # program state.
+    aux: Optional[jnp.ndarray] = None
 
 
 class ShardGraph(NamedTuple):
@@ -84,36 +90,49 @@ def wire_codec(prog, ep: EngineParams) -> ex_mod.WireCodec:
     """The exchange substrate's codec for this engine configuration.
 
     ``ep.wire_compression`` is already the *effective* mode (gated against
-    ``wire_value_bound`` when the params were derived), so the codec
-    re-gate is a no-op."""
+    ``wire_value_bound`` and the aggregator's idempotence when the params
+    were derived), so the codec re-gate is a no-op."""
     return ex_mod.make_wire_codec(
         num_shards=ep.num_shards, capacity=ep.route_capacity, vs=ep.vs,
         requested=ep.wire_compression, value_kind=prog.dtype,
         identity=prog.identity, max_int_value=ep.wire_value_bound,
-        quantize_direction=prog.aggregator.quantize_direction)
+        quantize_direction=prog.aggregator.quantize_direction,
+        idempotent=prog.aggregator.idempotent)
+
+
+def derive_params(cfg: GraphConfig, *, num_shards: int, vs: int, es: int,
+                  num_vertices: int, prog) -> EngineParams:
+    """THE EngineParams derivation — shared by the production path
+    (:func:`default_params`, from a built graph) and the dry-run
+    (:func:`lower_tick_for_mesh`, from config-level estimates), so the
+    dry-run compiles exactly what production runs (the two used to
+    re-derive ``route_capacity``/``max_vertices_per_tick`` by hand and
+    had drifted into different spellings of the same formula)."""
+    budget = cfg.edge_budget or max(es // 4, 256)
+    d_cap = max(min(cfg.avg_degree, 64), 4)
+    m = int(min(max(budget // d_cap, 16), vs))
+    # §Perf iter G1: 1.25x slack (was 2x) — wire and buffer traffic scale
+    # with cap; overflow just retries next tick (bounded-queue semantics)
+    cap = cfg.route_capacity or max(budget // num_shards
+                                    + budget // (4 * num_shards), 64)
+    bound = prog.wire_bound(num_vertices)
+    wire = ex_mod.effective_compression(cfg.wire_compression, prog.dtype,
+                                        bound, prog.aggregator.idempotent)
+    return EngineParams(
+        num_shards=num_shards, vs=vs, max_vertices_per_tick=m,
+        degree_window=d_cap, route_capacity=int(cap),
+        enforce_fraction=cfg.enforce_fraction, priority=cfg.priority,
+        priority_scale=prog.priority_scale or float(num_vertices),
+        wire_compression=wire, wire_value_bound=bound,
+        straggler_demote=getattr(cfg, "straggler_demote", 0))
 
 
 def default_params(cfg: GraphConfig, graph: ShardedGraph,
                    prog=None) -> EngineParams:
-    P_, vs = graph.num_shards, graph.vs
-    budget = cfg.edge_budget or max(graph.es // 4, 256)
-    d_cap = max(min(cfg.avg_degree, 64), 4)
-    m = max(budget // d_cap, 16)
-    m = int(min(m, vs))
-    # §Perf iter G1: 1.25x slack (was 2x) — wire and buffer traffic scale
-    # with cap; overflow just retries next tick (bounded-queue semantics)
-    cap = cfg.route_capacity or max(budget // P_ + budget // (4 * P_), 64)
     prog = prog or prog_mod.get_program(cfg)
-    bound = prog.wire_bound(graph.num_vertices)
-    wire = ex_mod.effective_compression(cfg.wire_compression, prog.dtype,
-                                        bound)
-    return EngineParams(
-        num_shards=P_, vs=vs, max_vertices_per_tick=m, degree_window=d_cap,
-        route_capacity=int(cap), enforce_fraction=cfg.enforce_fraction,
-        priority=cfg.priority,
-        priority_scale=prog.priority_scale or float(graph.num_vertices),
-        wire_compression=wire, wire_value_bound=bound,
-        straggler_demote=getattr(cfg, "straggler_demote", 0))
+    return derive_params(cfg, num_shards=graph.num_shards, vs=graph.vs,
+                         es=graph.es, num_vertices=graph.num_vertices,
+                         prog=prog)
 
 
 # ======================================================================
@@ -135,9 +154,11 @@ def priority_buckets(pv: jnp.ndarray, strategy: str, scale: float) -> jnp.ndarra
 # ======================================================================
 def _phase1_create(prog, ep: EngineParams, values, active, cursor,
                    row_ptr, col_idx, weights, shard_id,
-                   throttle=None, demote=None):
-    """Select + fetch + create + route. Returns updated (active, cursor),
-    send buffers and stats.
+                   throttle=None, demote=None, aux=None):
+    """Select + fetch + create + route. Returns ``(active, cursor,
+    send_vals, send_ids, sent, fetched, values, aux)`` — values/aux ride
+    at the END so callers of the historical 6-tuple still unpack; they
+    only change under a push-mode program.
 
     Crowded-cluster extras (both optional, both traced):
       * ``throttle`` — scalar work-budget divisor for this shard (a
@@ -149,9 +170,24 @@ def _phase1_create(prog, ep: EngineParams, values, active, cursor,
         threshold machinery still selects them when nothing healthier
         remains, so no vertex starves and the fixpoint cannot move
         (selection order is covered by §3.3 reordering invariance).
+
+    Push mode (``aux is not None``; non-idempotent aggregators): instead
+    of propagating its absolute value, a selected vertex *moves mass*.
+    On first selection of a push (push latch == 0) it latches ``m =
+    residual``, zeroes the residual and banks ``values += m`` — exactly
+    once per push, however many ticks the edge stream takes.  Messages
+    carry ``combine(m, w, deg)`` and, critically, only the contiguous
+    edge prefix up to the first routing drop ships: a kept edge AFTER
+    the first drop would be re-fetched when the cursor resumes there —
+    harmless duplication under an idempotent reduce, double-counted mass
+    under SUM.  When the stream completes (``done``) the latch clears
+    and the vertex stays active iff mass re-accumulated meanwhile.
     """
     vs, M, D = ep.vs, ep.max_vertices_per_tick, ep.degree_window
     Pn, cap = ep.num_shards, ep.route_capacity
+    push_mode = aux is not None
+    if push_mode:
+        residual, pushv = aux[0], aux[1]
 
     # ---- select (priority queue with enforcement fraction) ----
     # Sort-free selection (§Perf iter G1): bucket histogram + cumsum
@@ -163,9 +199,11 @@ def _phase1_create(prog, ep: EngineParams, values, active, cursor,
     target = jnp.clip(jnp.ceil(ep.enforce_fraction * n_active), 1, m_eff
                       ).astype(jnp.int32)
     # the aggregator orients the program's raw potential metric into an
-    # ascending key (min: low value first; max/or: high value first)
-    pkey = prog.aggregator.priority_key(prog.priority_value(values),
-                                        ep.priority_scale)
+    # ascending key (min: low value first; max/or: high value first;
+    # sum: most pending mass — residual + latched push — first)
+    pmetric = (prog.priority_value(residual + pushv) if push_mode
+               else prog.priority_value(values))
+    pkey = prog.aggregator.priority_key(pmetric, ep.priority_scale)
     buckets = priority_buckets(pkey, ep.priority, ep.priority_scale)
     if demote is not None and ep.straggler_demote:
         buckets = jnp.where(
@@ -208,7 +246,17 @@ def _phase1_create(prog, ep: EngineParams, values, active, cursor,
     w = weights[eidx_safe] if weights is not None else None
 
     # ---- create messages ----
-    msg = jnp.broadcast_to(prog.combine(values[sel_safe][:, None], w), (M, D))
+    if push_mode:
+        # latch: a selected vertex not already mid-push (latch == 0)
+        # moves its residual into the outgoing latch and banks it into
+        # the output value — exactly once per push
+        latch = sel_valid & (pushv[sel_safe] == 0)
+        mass = jnp.where(latch, residual[sel_safe], pushv[sel_safe])  # [M]
+        msg = jnp.broadcast_to(
+            prog.combine(mass[:, None], w, deg[:, None]), (M, D))
+    else:
+        msg = jnp.broadcast_to(prog.combine(values[sel_safe][:, None], w),
+                               (M, D))
 
     # ---- route: bucket by destination shard, bounded capacity ----
     dst_shard = jnp.where(dst >= 0, dst // vs, Pn)  # Pn = invalid bucket
@@ -221,7 +269,17 @@ def _phase1_create(prog, ep: EngineParams, values, active, cursor,
     rank = rank_sorted[inv].reshape(M, D)
 
     keep = edge_valid & (rank < cap)
-    r_safe = jnp.where(keep, rank, cap)
+    # first routing drop per vertex — the cursor stops there and retries
+    dropped = edge_valid & ~keep
+    any_drop = dropped.any(axis=1)
+    first_drop = jnp.where(any_drop, jnp.argmax(dropped, axis=1), D)
+    if push_mode:
+        # exactly-once: ship ONLY the contiguous prefix the cursor will
+        # advance past.  A kept edge after the first drop is re-fetched
+        # when the cursor resumes — idempotent reduces absorb that
+        # duplicate, a SUM would count the mass twice.
+        keep = keep & (offs[None, :] < first_drop[:, None])
+    r_safe = jnp.where(keep, rank, cap)  # cap = out of bounds -> dropped
     ds_safe = jnp.where(keep, dst_shard, 0)
     send_vals = jnp.full((Pn, cap), prog.identity, prog.jdtype).at[
         ds_safe.reshape(-1), r_safe.reshape(-1)].set(
@@ -232,19 +290,31 @@ def _phase1_create(prog, ep: EngineParams, values, active, cursor,
         mode="drop")
 
     # ---- cursor advance: up to the first dropped edge (retry the rest) ----
-    dropped = edge_valid & ~keep
-    any_drop = dropped.any(axis=1)
-    first_drop = jnp.where(any_drop, jnp.argmax(dropped, axis=1), D)
     advance = jnp.minimum(first_drop.astype(jnp.int32), deg - cur)
     new_cur = cur + jnp.where(sel_valid, advance, 0)
     done = sel_valid & (new_cur >= deg)
     upd_idx = jnp.where(sel_valid, sel, vs)  # OOB -> dropped
     cursor = cursor.at[upd_idx].set(jnp.where(done, 0, new_cur), mode="drop")
-    active = active.at[upd_idx].set(~done, mode="drop")
+    if push_mode:
+        res_after = jnp.where(latch, 0.0, residual[sel_safe]).astype(
+            prog.jdtype)
+        values = values.at[upd_idx].add(
+            jnp.where(latch, mass, 0.0).astype(prog.jdtype), mode="drop")
+        residual = residual.at[upd_idx].set(res_after, mode="drop")
+        pushv = pushv.at[upd_idx].set(
+            jnp.where(done, 0.0, mass).astype(prog.jdtype), mode="drop")
+        # a finished push retires; it re-arms iff mass accumulated while
+        # the stream was in flight (receives do NOT touch the cursor in
+        # push mode, so only this site may conclude a push)
+        active = active.at[upd_idx].set(
+            jnp.where(done, res_after > prog.push_eps, True), mode="drop")
+        aux = jnp.stack([residual, pushv])
+    else:
+        active = active.at[upd_idx].set(~done, mode="drop")
 
     sent = jnp.sum(keep)
     fetched = jnp.sum(edge_valid)
-    return active, cursor, send_vals, send_ids, sent, fetched
+    return active, cursor, send_vals, send_ids, sent, fetched, values, aux
 
 
 def _phase2_receive(prog, ep: EngineParams, values, active, cursor,
@@ -267,42 +337,69 @@ def _phase2_receive(prog, ep: EngineParams, values, active, cursor,
     return values, active, cursor, accepted
 
 
+def _phase2_receive_push(prog, ep: EngineParams, residual, active,
+                         recv_vals, recv_ids):
+    """Push-mode delivery: scatter-ADD into the residual plane (the SUM
+    aggregator); vertices whose pending mass crosses the push threshold
+    join the frontier.
+
+    Two deliberate differences from the idempotent receive: the banked
+    output (``values``) is untouched — mass only enters it through the
+    phase-1 latch — and the cursor is NOT reset, because restarting an
+    in-progress edge stream would re-ship its already-delivered prefix
+    (exactly-once would become at-least-once)."""
+    agg = prog.aggregator
+    vs = ep.vs
+    ids = recv_ids.reshape(-1)
+    vals = recv_vals.reshape(-1).astype(prog.jdtype)
+    valid = ids >= 0
+    idx = jnp.where(valid, ids, vs)  # vs -> dropped (out of bounds)
+    residual = agg.scatter(residual, idx,
+                           jnp.where(valid, vals, prog.identity))
+    accepted = jnp.sum(valid)  # every delivered message lands mass
+    active = active | (residual > prog.push_eps)
+    return residual, active, accepted
+
+
 # ======================================================================
 # Local (single-device, vmapped) execution
 # ======================================================================
 def make_local_tick(prog, ep: EngineParams, weighted: bool):
     codec = wire_codec(prog, ep)
+    push_mode = not prog.aggregator.idempotent
 
     def tick(state: EngineState, g: ShardGraph):
         shard_ids = jnp.arange(ep.num_shards)
-
-        def p1(values, active, cursor, row_ptr, col_idx, weights, sid):
-            return _phase1_create(prog, ep, values, active, cursor, row_ptr,
-                                  col_idx, weights, sid)
-
         w = g.weights if weighted else None
-        if w is None:
-            p1v = jax.vmap(lambda v, a, c, r, ci, s:
-                           p1(v, a, c, r, ci, None, s))
-            active, cursor, sv, si, sent, fetched = p1v(
-                state.values, state.active, state.cursor, g.row_ptr,
-                g.col_idx, shard_ids)
-        else:
-            p1v = jax.vmap(p1)
-            active, cursor, sv, si, sent, fetched = p1v(
-                state.values, state.active, state.cursor, g.row_ptr,
-                g.col_idx, w, shard_ids)
+        aux = state.aux if push_mode else None
+
+        p1v = jax.vmap(
+            lambda v, a, c, r, ci, wt, s, ax: _phase1_create(
+                prog, ep, v, a, c, r, ci, wt, s, aux=ax),
+            in_axes=(0, 0, 0, 0, 0, 0 if weighted else None, 0,
+                     0 if push_mode else None))
+        active, cursor, sv, si, sent, fetched, values, aux = p1v(
+            state.values, state.active, state.cursor, g.row_ptr,
+            g.col_idx, w, shard_ids, aux)
 
         # exchange: send[p][q] -> recv[q][p] via the dist substrate
         rv, ri = ex_mod.exchange_local(codec, sv, si)
 
-        p2v = jax.vmap(lambda v, a, c, rvals, rids:
-                       _phase2_receive(prog, ep, v, a, c, rvals, rids))
-        values, active, cursor, accepted = p2v(state.values, active, cursor,
-                                               rv, ri)
+        if push_mode:
+            p2v = jax.vmap(lambda res, a, rvals, rids: _phase2_receive_push(
+                prog, ep, res, a, rvals, rids))
+            residual, active, accepted = p2v(aux[:, 0], active, rv, ri)
+            aux = aux.at[:, 0].set(residual)
+        else:
+            p2v = jax.vmap(lambda v, a, c, rvals, rids:
+                           _phase2_receive(prog, ep, v, a, c, rvals, rids))
+            values, active, cursor, accepted = p2v(values, active, cursor,
+                                                   rv, ri)
+            aux = state.aux  # None (or an untouched caller-supplied plane)
         stats = TickStats(jnp.sum(active), jnp.sum(sent), jnp.sum(accepted),
                           jnp.sum(fetched))
-        return EngineState(values, active, cursor, state.tick + 1), stats, (sv, si)
+        return (EngineState(values, active, cursor, state.tick + 1, aux),
+                stats, (sv, si))
 
     return jax.jit(tick)
 
@@ -368,44 +465,51 @@ def make_crowded_tick(prog, ep: EngineParams, weighted: bool):
     frontier AND an empty ring (``stats.pending == 0``)."""
     codec = wire_codec(prog, ep)
     agg = prog.aggregator
+    push_mode = not agg.idempotent
 
     def tick(cstate: CrowdedState, g: ShardGraph, delays, throttle):
         state = cstate.core
         shard_ids = jnp.arange(ep.num_shards)
-
-        def p1(values, active, cursor, row_ptr, col_idx, weights, sid,
-               thr, dem):
-            return _phase1_create(prog, ep, values, active, cursor,
-                                  row_ptr, col_idx, weights, sid,
-                                  throttle=thr, demote=dem)
-
         w = g.weights if weighted else None
-        if w is None:
-            p1v = jax.vmap(lambda v, a, c, r, ci, s, t_, d_:
-                           p1(v, a, c, r, ci, None, s, t_, d_))
-            active, cursor, sv, si, sent, fetched = p1v(
-                state.values, state.active, state.cursor, g.row_ptr,
-                g.col_idx, shard_ids, throttle, cstate.demote)
-        else:
-            p1v = jax.vmap(p1, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0))
-            active, cursor, sv, si, sent, fetched = p1v(
-                state.values, state.active, state.cursor, g.row_ptr,
-                g.col_idx, w, shard_ids, throttle, cstate.demote)
+        aux = state.aux if push_mode else None
+
+        p1v = jax.vmap(
+            lambda v, a, c, r, ci, wt, s, t_, d_, ax: _phase1_create(
+                prog, ep, v, a, c, r, ci, wt, s, throttle=t_, demote=d_,
+                aux=ax),
+            in_axes=(0, 0, 0, 0, 0, 0 if weighted else None, 0, 0, 0,
+                     0 if push_mode else None))
+        active, cursor, sv, si, sent, fetched, values, aux = p1v(
+            state.values, state.active, state.cursor, g.row_ptr,
+            g.col_idx, w, shard_ids, throttle, cstate.demote, aux)
 
         # exchange through the deferred-delivery ring: messages from slow
         # links surface ticks later, healthy links deliver immediately
         rv, ri, ring, pending = ex_mod.exchange_local_delayed(
             codec, cstate.ring, sv, si, state.tick, delays, prog.identity)
 
-        old_values = state.values
-        p2v = jax.vmap(lambda v, a, c, rvals, rids:
-                       _phase2_receive(prog, ep, v, a, c, rvals, rids))
-        values, active, cursor, accepted = p2v(state.values, active, cursor,
-                                               rv, ri)
+        if push_mode:
+            # receive accumulates into the residual plane; the demotion
+            # comparison plane is the residual, too (that is where a slow
+            # link's arrival lands)
+            old_plane = aux[:, 0]
+            p2v = jax.vmap(lambda res, a, rvals, rids: _phase2_receive_push(
+                prog, ep, res, a, rvals, rids))
+            residual, active, accepted = p2v(old_plane, active, rv, ri)
+            aux = aux.at[:, 0].set(residual)
+            new_plane = residual
+        else:
+            old_plane = state.values
+            p2v = jax.vmap(lambda v, a, c, rvals, rids:
+                           _phase2_receive(prog, ep, v, a, c, rvals, rids))
+            values, active, cursor, accepted = p2v(values, active, cursor,
+                                                   rv, ri)
+            aux = state.aux
+            new_plane = values
         if ep.straggler_demote:
             slow_rows = _slow_recv_rows(ep, ri.shape[1], delays)
             demote = jax.vmap(lambda nv, ov, rids, srow: _demote_row(
-                agg, ep, nv, ov, rids, srow))(values, old_values, ri,
+                agg, ep, nv, ov, rids, srow))(new_plane, old_plane, ri,
                                               slow_rows)
         else:
             demote = jnp.zeros_like(cstate.demote)
@@ -414,7 +518,7 @@ def make_crowded_tick(prog, ep: EngineParams, weighted: bool):
                           jnp.sum(accepted), jnp.sum(fetched))
         cstats = CrowdedStats(stats, pending, fetched,
                               jnp.sum(ri >= 0, axis=(1, 2)))
-        core = EngineState(values, active, cursor, state.tick + 1)
+        core = EngineState(values, active, cursor, state.tick + 1, aux)
         return CrowdedState(core, ring, demote), cstats, (sv, si)
 
     return jax.jit(tick)
@@ -426,38 +530,49 @@ def make_crowded_tick(prog, ep: EngineParams, weighted: bool):
 def make_dist_tick(prog, ep: EngineParams, mesh: Mesh, weighted: bool):
     axis = "workers"
     codec = wire_codec(prog, ep)
+    push_mode = not prog.aggregator.idempotent
 
-    def local_fn(values, active, cursor, tick, row_ptr, col_idx, weights):
+    def local_fn(values, active, cursor, tick, aux, row_ptr, col_idx,
+                 weights):
         sid = jax.lax.axis_index(axis)
         values, active, cursor = values[0], active[0], cursor[0]
+        aux_row = aux[0] if push_mode else None
         w = weights[0] if weighted else None
-        active, cursor, sv, si, sent, fetched = _phase1_create(
-            prog, ep, values, active, cursor, row_ptr[0], col_idx[0], w, sid)
+        active, cursor, sv, si, sent, fetched, values, aux_row = \
+            _phase1_create(prog, ep, values, active, cursor, row_ptr[0],
+                           col_idx[0], w, sid, aux=aux_row)
         rv, ri = ex_mod.exchange_dist(codec, sv, si, axis)
-        values, active, cursor, accepted = _phase2_receive(
-            prog, ep, values, active, cursor, rv, ri)
+        if push_mode:
+            residual, active, accepted = _phase2_receive_push(
+                prog, ep, aux_row[0], active, rv, ri)
+            aux_out = aux_row.at[0].set(residual)[None]
+        else:
+            values, active, cursor, accepted = _phase2_receive(
+                prog, ep, values, active, cursor, rv, ri)
+            aux_out = aux  # the replicated dummy scalar
         n_active = jax.lax.psum(jnp.sum(active), axis)
         sent = jax.lax.psum(sent, axis)
         accepted = jax.lax.psum(accepted, axis)
         fetched = jax.lax.psum(fetched, axis)
         return (values[None], active[None], cursor[None], tick + 1,
-                TickStats(n_active, sent, accepted, fetched))
-
-    w_spec = P(axis) if weighted else P()
+                aux_out, TickStats(n_active, sent, accepted, fetched))
 
     def tick_fn(state: EngineState, g: ShardGraph):
+        aux_spec = P(axis) if push_mode else P()
         sm = shard_map(
             local_fn, mesh=mesh,
-            in_specs=(P(axis), P(axis), P(axis), P(), P(axis), P(axis),
-                      P(axis) if weighted else P()),
-            out_specs=(P(axis), P(axis), P(axis), P(),
+            in_specs=(P(axis), P(axis), P(axis), P(), aux_spec, P(axis),
+                      P(axis), P(axis) if weighted else P()),
+            out_specs=(P(axis), P(axis), P(axis), P(), aux_spec,
                        TickStats(P(), P(), P(), P())),
             check_vma=False)
         weights = g.weights if weighted else jnp.zeros((), jnp.float32)
-        values, active, cursor, tick, stats = sm(
-            state.values, state.active, state.cursor, state.tick,
+        aux_in = state.aux if push_mode else jnp.zeros((), jnp.float32)
+        values, active, cursor, tick, aux, stats = sm(
+            state.values, state.active, state.cursor, state.tick, aux_in,
             g.row_ptr, g.col_idx, weights)
-        return EngineState(values, active, cursor, tick), stats
+        return EngineState(values, active, cursor, tick,
+                           aux if push_mode else state.aux), stats
 
     return tick_fn
 
@@ -488,25 +603,37 @@ def make_crowded_dist_tick(prog, ep: EngineParams, mesh: Mesh,
     axis = "workers"
     codec = wire_codec(prog, ep)
     agg = prog.aggregator
+    push_mode = not agg.idempotent
 
-    def local_fn(values, active, cursor, tick, rv_ring, ri_ring, rd_ring,
-                 demote, row_ptr, col_idx, weights, delays, throttle):
+    def local_fn(values, active, cursor, tick, aux, rv_ring, ri_ring,
+                 rd_ring, demote, row_ptr, col_idx, weights, delays,
+                 throttle):
         sid = jax.lax.axis_index(axis)
         values, active, cursor = values[0], active[0], cursor[0]
+        aux_row = aux[0] if push_mode else None
         ring = ex_mod.DelayRing(rv_ring[0], ri_ring[0], rd_ring[0])
         w = weights[0] if weighted else None
-        active, cursor, sv, si, sent, fetched = _phase1_create(
-            prog, ep, values, active, cursor, row_ptr[0], col_idx[0], w,
-            sid, throttle=throttle[sid], demote=demote[0])
+        active, cursor, sv, si, sent, fetched, values, aux_row = \
+            _phase1_create(prog, ep, values, active, cursor, row_ptr[0],
+                           col_idx[0], w, sid, throttle=throttle[sid],
+                           demote=demote[0], aux=aux_row)
         rv, ri, ring, pending = ex_mod.exchange_dist_delayed(
             codec, ring, sv, si, tick, delays[sid], axis, prog.identity)
-        old_values = values
-        values, active, cursor, accepted = _phase2_receive(
-            prog, ep, values, active, cursor, rv, ri)
+        if push_mode:
+            old_plane = aux_row[0]
+            residual, active, accepted = _phase2_receive_push(
+                prog, ep, old_plane, active, rv, ri)
+            aux_row = aux_row.at[0].set(residual)
+            new_plane, aux_out = residual, aux_row[None]
+        else:
+            old_plane = values
+            values, active, cursor, accepted = _phase2_receive(
+                prog, ep, values, active, cursor, rv, ri)
+            new_plane, aux_out = values, aux
         if ep.straggler_demote:
             srow = delays[jnp.arange(ri.shape[0], dtype=jnp.int32)
                           % ep.num_shards, sid] > 0
-            dem = _demote_row(agg, ep, values, old_values, ri, srow)
+            dem = _demote_row(agg, ep, new_plane, old_plane, ri, srow)
         else:
             dem = jnp.zeros_like(demote[0])
         stats = TickStats(jax.lax.psum(jnp.sum(active), axis),
@@ -515,26 +642,29 @@ def make_crowded_dist_tick(prog, ep: EngineParams, mesh: Mesh,
                           jax.lax.psum(fetched, axis))
         pending = jax.lax.psum(pending, axis)
         return (values[None], active[None], cursor[None], tick + 1,
-                ring.vals[None], ring.ids[None], ring.due[None], dem[None],
-                stats, pending)
+                aux_out, ring.vals[None], ring.ids[None], ring.due[None],
+                dem[None], stats, pending)
 
     def tick_fn(cstate: CrowdedState, g: ShardGraph, delays, throttle):
         state = cstate.core
         Pw = P(axis)
+        aux_spec = Pw if push_mode else P()
         sm = shard_map(
             local_fn, mesh=mesh,
-            in_specs=(Pw, Pw, Pw, P(), Pw, Pw, Pw, Pw, Pw, Pw,
+            in_specs=(Pw, Pw, Pw, P(), aux_spec, Pw, Pw, Pw, Pw, Pw, Pw,
                       Pw if weighted else P(), P(), P()),
-            out_specs=(Pw, Pw, Pw, P(), Pw, Pw, Pw, Pw,
+            out_specs=(Pw, Pw, Pw, P(), aux_spec, Pw, Pw, Pw, Pw,
                        TickStats(P(), P(), P(), P()), P()),
             check_vma=False)
         weights = g.weights if weighted else jnp.zeros((), jnp.float32)
-        (values, active, cursor, tick, rvr, rir, rdr, demote, stats,
+        aux_in = state.aux if push_mode else jnp.zeros((), jnp.float32)
+        (values, active, cursor, tick, aux, rvr, rir, rdr, demote, stats,
          pending) = sm(state.values, state.active, state.cursor, state.tick,
-                       cstate.ring.vals, cstate.ring.ids, cstate.ring.due,
-                       cstate.demote, g.row_ptr, g.col_idx, weights,
-                       delays, throttle)
-        core = EngineState(values, active, cursor, tick)
+                       aux_in, cstate.ring.vals, cstate.ring.ids,
+                       cstate.ring.due, cstate.demote, g.row_ptr, g.col_idx,
+                       weights, delays, throttle)
+        core = EngineState(values, active, cursor, tick,
+                           aux if push_mode else state.aux)
         return (CrowdedState(core, ex_mod.DelayRing(rvr, rir, rdr), demote),
                 stats, pending)
 
@@ -549,9 +679,10 @@ def init_state(prog, graph: ShardedGraph) -> EngineState:
     gids = jnp.arange(P_ * vs, dtype=jnp.int32).reshape(P_, vs)
     valid = gids < graph.num_real_vertices
     values, active = prog.init(gids, valid)
+    aux = prog.init_aux(gids, valid) if prog.aux_channels else None
     return EngineState(values, active,
                        jnp.zeros((P_, vs), jnp.int32),
-                       jnp.zeros((), jnp.int32))
+                       jnp.zeros((), jnp.int32), aux)
 
 
 def to_device_graph(graph: ShardedGraph) -> ShardGraph:
@@ -725,19 +856,11 @@ def lower_tick_for_mesh(cfg: GraphConfig, mesh_2d, n_workers: int):
     from repro.dist.sharding import vertex_partition
     vs = vertex_partition(cfg.num_vertices, n_workers).vs
     es = max(cfg.num_edges * 2 // n_workers, 1)  # symmetrized estimate
-    bound = prog.wire_bound(cfg.num_vertices)
-    ep = EngineParams(
-        num_shards=n_workers, vs=vs,
-        max_vertices_per_tick=min(max((cfg.edge_budget or es // 4)
-                                      // max(cfg.avg_degree, 1), 16), vs),
-        degree_window=max(min(cfg.avg_degree, 64), 4),
-        route_capacity=max(((cfg.edge_budget or es // 4) * 5)
-                           // (4 * n_workers), 64),
-        enforce_fraction=cfg.enforce_fraction, priority=cfg.priority,
-        priority_scale=prog.priority_scale or float(cfg.num_vertices),
-        wire_compression=ex_mod.effective_compression(
-            cfg.wire_compression, prog.dtype, bound),
-        wire_value_bound=bound)
+    # ONE derivation with production (default_params) — the dry-run
+    # compiles exactly the params a real run would use, including the
+    # SUM/idempotence wire gating
+    ep = derive_params(cfg, num_shards=n_workers, vs=vs, es=es,
+                       num_vertices=cfg.num_vertices, prog=prog)
     tick_fn = make_dist_tick(prog, ep, mesh, prog.weighted)
 
     sh = lambda spec: NamedSharding(mesh, spec)
@@ -747,6 +870,9 @@ def lower_tick_for_mesh(cfg: GraphConfig, mesh_2d, n_workers: int):
         jax.ShapeDtypeStruct((n_workers, vs), jnp.bool_, sharding=sh(Pw)),
         jax.ShapeDtypeStruct((n_workers, vs), jnp.int32, sharding=sh(Pw)),
         jax.ShapeDtypeStruct((), jnp.int32, sharding=sh(P())),
+        jax.ShapeDtypeStruct((n_workers, prog.aux_channels, vs),
+                             prog.jdtype, sharding=sh(Pw))
+        if prog.aux_channels else None,
     )
     g = ShardGraph(
         jax.ShapeDtypeStruct((n_workers, vs + 1), jnp.int32, sharding=sh(Pw)),

@@ -18,7 +18,11 @@ is only legal for programs whose receive-side reduce is idempotent —
 ``self_stabilizing=False`` are rejected by the replay path: the manager
 falls back to a *globally consistent* checkpoint restore (every shard
 rolls back to the same snapshot tick — BSP-style, strictly more
-expensive, but correct without idempotence).
+expensive, but correct without idempotence).  The shipped ``pagerank``
+residual-push program (SUM aggregation) is the canonical case: its
+snapshots must carry the push-mode aux planes (residual + latched mass)
+alongside values/frontier/cursors, or restored runs would lose and
+double-count mass.
 
 `FaultPlan` encodes the paper's §5.5 experiments: fail x% of shards once /
 all once / all twice over the course of the run ("rolling failures").
@@ -118,18 +122,26 @@ def apply_slowdown(plan: Optional[FaultPlan], t: int, delays: np.ndarray,
             or t < plan.slow_start
             or (plan.slow_stop and t >= plan.slow_stop)):
         return delays, throttle
-    # the overlay is deterministic in (plan, base) — computed once, not
-    # per tick (the host loop calls this every tick of the window)
+    # the overlay is deterministic in (plan fields, base) — computed once,
+    # not per tick (the host loop calls this every tick of the window).
+    # The cache key covers every field the overlay reads, NOT just the
+    # base-array identities: a caller mutating slow_delay/slow_fraction/
+    # slow_intensity/seed on a (non-frozen) plan between runs used to be
+    # served the stale overlay.  (The base arrays are compared by
+    # identity; holding them in the cache keeps those ids live.)
+    key = (plan.slow_fraction, plan.slow_delay, plan.slow_intensity,
+           plan.seed)
     cache = getattr(plan, "_overlay_cache", None)
-    if cache is None or cache[0] is not delays or cache[1] is not throttle:
+    if (cache is None or cache[0] != key or cache[1] is not delays
+            or cache[2] is not throttle):
         d = delays.copy()
         th = throttle.copy()
         for p in plan.slow_shards(delays.shape[0]):
             d[p, :] = np.maximum(d[p, :], plan.slow_delay)
             th[p] = max(int(th[p]), int(plan.slow_intensity))
-        cache = (delays, throttle, d, th)
+        cache = (key, delays, throttle, d, th)
         plan._overlay_cache = cache
-    return cache[2], cache[3]
+    return cache[3], cache[4]
 
 
 class FaultManager:
@@ -148,7 +160,8 @@ class FaultManager:
         # replayed window by the maximum link delay (duplicates are safe
         # by idempotence; zero for immediate-delivery runs)
         self.replay_slack = replay_slack
-        # per-shard checkpoint: tick -> (values, active, cursor) rows
+        # per-shard checkpoint: tick -> (values, active, cursor, aux) rows
+        # (aux = the push-mode sidecar planes, None for idempotent programs)
         self.ckpt_tick = np.full(graph.num_shards, -1, np.int64)
         self.ckpt: dict[int, tuple] = {}
         # ring log of outgoing buffers: tick -> (send_vals, send_ids) numpy
@@ -161,8 +174,10 @@ class FaultManager:
             vals = np.asarray(state.values)
             act = np.asarray(state.active)
             cur = np.asarray(state.cursor)
+            aux = (np.asarray(state.aux) if state.aux is not None else None)
             for p in range(self.graph.num_shards):
-                self.ckpt[p] = (vals[p].copy(), act[p].copy(), cur[p].copy())
+                self.ckpt[p] = (vals[p].copy(), act[p].copy(), cur[p].copy(),
+                                aux[p].copy() if aux is not None else None)
                 self.ckpt_tick[p] = t
         if self.recovery == "replay":  # checkpoint mode never reads the log
             sv, si = send_bufs
@@ -202,7 +217,7 @@ class FaultManager:
 
         # (2) recover own state from the last committed snapshot
         if p in self.ckpt:
-            v, a, c = self.ckpt[p]
+            v, a, c, _ = self.ckpt[p]
             values[p], active[p], cursor[p] = v, a, c
             since = int(self.ckpt_tick[p])
         else:  # no checkpoint yet -> re-init this shard
@@ -245,8 +260,11 @@ class FaultManager:
                 b = self.graph.boundary[q, p]
                 active[q] |= b
                 cursor[q] = np.where(b, 0, cursor[q])
+        # replay recovery is refused for non-idempotent programs, so aux
+        # (push-mode only) can simply pass through here
         return EngineState(jnp.asarray(values), jnp.asarray(active),
-                           jnp.asarray(cursor), state.tick), replayed
+                           jnp.asarray(cursor), state.tick,
+                           state.aux), replayed
 
     # ------------------------------------------------------------------
     def _global_restore(self, state: EngineState) -> EngineState:
@@ -266,5 +284,10 @@ class FaultManager:
         values = np.stack([self.ckpt[p][0] for p in range(P_)])
         active = np.stack([self.ckpt[p][1] for p in range(P_)])
         cursor = np.stack([self.ckpt[p][2] for p in range(P_)])
+        # the push-mode sidecar (residual + latched mass) is program
+        # state: restoring values without it would both lose and
+        # double-count mass
+        aux = (jnp.asarray(np.stack([self.ckpt[p][3] for p in range(P_)]))
+               if self.ckpt[0][3] is not None else None)
         return EngineState(jnp.asarray(values), jnp.asarray(active),
-                           jnp.asarray(cursor), state.tick)
+                           jnp.asarray(cursor), state.tick, aux)

@@ -1,5 +1,6 @@
 """Merger phase (paper §3.1 / GetOutputString, §4): extract per-vertex output
-once the propagation phase converges."""
+once the propagation phase converges — plus output-side integrity checks
+(the push-mode mass-balance invariant)."""
 from __future__ import annotations
 
 import numpy as np
@@ -12,6 +13,32 @@ def extract(state: EngineState, graph: ShardedGraph, prog) -> np.ndarray:
     """Returns dense per-vertex output [num_real_vertices]."""
     values = np.asarray(prog.output(state.values)).reshape(-1)
     return values[: graph.num_real_vertices]
+
+
+def mass_balance(state: EngineState, graph: ShardedGraph,
+                 damping: float = 0.85) -> float:
+    """Normalized total mass of a push-mode (pagerank) run; exactly 1.0
+    (mod float error) at EVERY tick boundary iff delivery is exactly-once.
+
+    Accounts all four places a unit of probability can legally be:
+    banked rank (scaled by 1-d), the residual plane, the un-shipped tail
+    of a latched push (``d * push * (deg - cursor) / deg`` — the shipped
+    prefix already sits in peers' residuals), and the mass absorbed at
+    degree-0 vertices (``d * rank`` there: every push at a dangling
+    vertex evaporates its damped share).  A lost, duplicated or
+    double-retried message moves the result away from 1."""
+    assert state.aux is not None, "mass_balance needs push-mode aux planes"
+    n = graph.num_real_vertices
+    d = damping
+    rank = np.asarray(state.values, np.float64).reshape(-1)[:n]
+    res = np.asarray(state.aux[:, 0], np.float64).reshape(-1)[:n]
+    push = np.asarray(state.aux[:, 1], np.float64).reshape(-1)[:n]
+    cur = np.asarray(state.cursor, np.float64).reshape(-1)[:n]
+    deg = np.asarray(graph.degrees()).reshape(-1)[:n].astype(np.float64)
+    inflight = d * push * (deg - cur) / np.maximum(deg, 1.0)
+    leak = d * rank[deg == 0].sum()
+    return float(((1 - d) * rank.sum() + res.sum() + inflight.sum() + leak)
+                 / ((1 - d) * n))
 
 
 def output_table(state: EngineState, graph: ShardedGraph, prog

@@ -2,18 +2,25 @@
 ReceiveMessage / GetOutputString, §4) over pluggable aggregation semirings.
 
 A program declares its receive-side reduce as an explicit
-:class:`~repro.core.semiring.Aggregator` (min / max / or).  Every
-aggregator shipped here is commutative and idempotent, which is the
-paper's §3.3 self-stabilization precondition: such programs tolerate
-arbitrary message order, duplication and replay — what makes the lockless
-engine and the replay-based fault recovery correct.  A program whose
-update is NOT idempotent must set ``self_stabilizing=False``; the fault
-manager then refuses replay recovery and falls back to a globally
-consistent checkpoint restore (see ``core/faults.py``).
+:class:`~repro.core.semiring.Aggregator` (min / max / or / sum).
+Idempotent aggregators give the paper's §3.3 self-stabilization
+precondition: such programs tolerate arbitrary message order,
+duplication and replay — what makes the lockless engine and the
+replay-based fault recovery correct.  A program whose update is NOT
+idempotent (``pagerank``, over SUM) must set ``self_stabilizing=False``;
+the fault manager then refuses replay recovery and falls back to a
+globally consistent checkpoint restore (see ``core/faults.py``), the
+wire gate refuses lossy compression, and the engine runs its
+*push-mode* value plane: alongside ``values`` (the banked output) the
+state carries an aux sidecar of ``aux_channels`` per-vertex planes —
+channel 0 is the receive-side accumulation target (*residual*),
+channel 1 the latched amount currently being streamed out (*push*) —
+so that every unit of mass is banked, shipped and delivered exactly
+once (see ``core/engine._phase1_create``).
 
 The registry is parameterized: ``get_program("sssp", source=5)`` or
-``get_program(cfg)`` (which forwards ``cfg.source`` to programs that
-take one).
+``get_program(cfg)`` (which forwards ``cfg.source`` / ``cfg.damping``
+to programs that take them).
 """
 from __future__ import annotations
 
@@ -23,7 +30,7 @@ from typing import Callable, Optional
 
 import jax.numpy as jnp
 
-from repro.core.semiring import MAX, MIN, OR, Aggregator
+from repro.core.semiring import MAX, MIN, OR, SUM, Aggregator
 
 INT_INF = jnp.iinfo(jnp.int32).max
 F32_INF = jnp.float32(jnp.inf)
@@ -37,7 +44,10 @@ class VertexProgram:
     weighted: bool
     # init(global_ids [vs], valid [vs]) -> (values, active)
     init: Callable
-    # combine(src_value [M,1], weight [M,D] | None) -> message values [M,D]
+    # combine(src_value [M,1], weight [M,D] | None) -> message values [M,D].
+    # Push-mode programs (aux_channels > 0) get a third argument: the
+    # selected vertices' degrees [M,1] (a push distributes its latched
+    # mass over ALL of a vertex's edges, across streaming ticks).
     combine: Callable
     # priority_value(values) -> f32 raw potential metric; the aggregator's
     # priority_key orients it (min: low value = propagate sooner, max:
@@ -54,6 +64,15 @@ class VertexProgram:
     value_bound: Optional[Callable] = None
     # priority normalization hint (None -> num_vertices)
     priority_scale: Optional[float] = None
+    # push-mode sidecar state: number of aux planes riding EngineState.aux
+    # as [P, aux_channels, vs] (0 = none; non-idempotent programs need 2:
+    # aux[0] = residual (receive accumulation), aux[1] = push latch)
+    aux_channels: int = 0
+    # init_aux(global_ids [.., vs], valid) -> aux [.., aux_channels, vs]
+    init_aux: Optional[Callable] = None
+    # push-mode activation threshold: a vertex pushes when its residual
+    # exceeds this (bounds the converged L1 error by push_eps / (1 - d))
+    push_eps: float = 0.0
 
     @property
     def jdtype(self):
@@ -199,6 +218,65 @@ def labelprop() -> VertexProgram:
                          priority_value)
 
 
+def pagerank(damping: float = 0.85, push_eps: float = 1e-5) -> VertexProgram:
+    """Residual-push PageRank (GraphLab-style accumulation): the paper's
+    §3.3 caveat made executable — the first genuinely non-idempotent
+    program, exercising the checkpoint-restore recovery path for real.
+
+    Per-vertex state:
+
+      * ``values``  — the banked rank ``p_v`` (the output);
+      * ``aux[0]``  — the residual ``r_v``: incoming mass accumulates
+        here via scatter-ADD (the SUM aggregator);
+      * ``aux[1]``  — the push latch: when a vertex with ``r_v >
+        push_eps`` is selected, the engine latches ``m = r_v``, zeroes
+        the residual, banks ``p_v += m`` and streams ``d * m / deg_v``
+        along every edge (across ticks, under backpressure) — the latch
+        is what keeps a partially-shipped push consistent while new mass
+        keeps arriving.
+
+    Solves the unnormalized system ``p = (1-d)·1 + d·P^T p`` (so ``p /
+    n`` is the PageRank distribution; kernels/ops.pagerank with
+    ``dangling="absorb"`` is the dense pull-mode oracle).  The push
+    invariant ``(1-d)·Σp + Σr + Σpush = (1-d)·n - leak(dangling)`` is
+    the mass-conservation property the exactly-once tests assert: any
+    lost, duplicated or double-retried message moves it.
+
+    NOT self-stabilizing: duplicated delivery double-counts, so replay
+    recovery is refused (globally consistent checkpoint restore instead)
+    and lossy wire modes gate to "none".
+    """
+
+    def init(global_ids, valid):
+        del global_ids
+        return jnp.zeros(valid.shape, jnp.float32), valid
+
+    def init_aux(global_ids, valid):
+        del global_ids
+        residual = jnp.where(valid, 1.0 - damping, 0.0).astype(jnp.float32)
+        push = jnp.zeros(valid.shape, jnp.float32)
+        return jnp.stack([residual, push], axis=-2)
+
+    def combine(mass, weights, degrees):
+        del weights  # unweighted: mass splits evenly over the edges
+        return damping * mass / jnp.maximum(degrees, 1).astype(jnp.float32)
+
+    def priority_value(pending):
+        # the engine feeds residual + latched push.  Mass spans orders of
+        # magnitude (initial 1-d down to push_eps), so the useful key is
+        # LOG pending mass, negated to ascend: the biggest masses land in
+        # the lowest buckets and drain first — pushing near-eps crumbs
+        # before the mass that will immediately re-dirty them is what
+        # makes residual push O(total mass / eps)-free.
+        floor = jnp.float32(2.0 ** -24)
+        return -jnp.log2(jnp.maximum(pending, floor))
+
+    return VertexProgram("pagerank", "float32", SUM, False, init, combine,
+                         priority_value, self_stabilizing=False,
+                         priority_scale=24.0, aux_channels=2,
+                         init_aux=init_aux, push_eps=push_eps)
+
+
 PROGRAMS: dict[str, Callable[..., VertexProgram]] = {
     "cc": connected_components,
     "sssp": sssp,
@@ -206,6 +284,7 @@ PROGRAMS: dict[str, Callable[..., VertexProgram]] = {
     "reachability": reachability,
     "widest_path": widest_path,
     "labelprop": labelprop,
+    "pagerank": pagerank,
 }
 
 
@@ -220,15 +299,16 @@ def get_program(cfg_or_name, **params) -> VertexProgram:
 
     ``get_program("sssp", source=5)`` builds the program directly;
     ``get_program(cfg)`` resolves ``cfg.algorithm`` and forwards the
-    config fields the factory accepts (currently ``source``).  Explicit
-    ``params`` win over config-derived ones.
+    config fields the factory accepts (currently ``source`` and
+    ``damping``).  Explicit ``params`` win over config-derived ones.
     """
     if isinstance(cfg_or_name, str):
         name, derived = cfg_or_name, {}
     else:
         cfg = cfg_or_name
         name = cfg.algorithm
-        derived = {"source": getattr(cfg, "source", 0)}
+        derived = {"source": getattr(cfg, "source", 0),
+                   "damping": getattr(cfg, "damping", 0.85)}
     if name not in PROGRAMS:
         raise ValueError(
             f"unknown program {name!r}; registered: {sorted(PROGRAMS)}")

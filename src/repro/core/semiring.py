@@ -9,7 +9,7 @@ priority queue's ordering key, the wire codec's quantization direction
 and the Pallas kernels' reduce all derive from it instead of hardcoding
 scatter-min.
 
-Three aggregators ship:
+Four aggregators ship:
 
   * ``MIN`` — min-monotone programs (CC, SSSP, BFS).  Values only ever
     decrease; lossy wire encodings must round *up* (never under-estimate,
@@ -20,17 +20,27 @@ Three aggregators ship:
     path widths), so the int identity is ``-1`` and the float identity
     ``0.0`` — both narrow losslessly.
   * ``OR`` — boolean saturation (reachability): ``max`` over {0, 1}.
+  * ``SUM`` — scatter-add accumulation (residual-push PageRank).  The
+    one aggregator that is NOT idempotent: ``a + a != a``, so a
+    duplicated, replayed or lossily-quantized message *changes the
+    fixpoint* instead of being absorbed by it.
 
-All three are idempotent (``a ⊕ a = a``), which is exactly the property
-the replay-based fault recovery needs; a :class:`~repro.core.programs.
-VertexProgram` whose update is *not* idempotent must set
-``self_stabilizing=False`` and is routed to checkpoint-restore recovery
-instead (see ``core/faults.py``).
+``Aggregator.idempotent`` makes that split explicit (MIN/MAX/OR set it
+true), because three subsystems key off it: the fault manager refuses
+replay recovery for non-idempotent programs (duplicates double-count)
+and takes a globally consistent checkpoint restore instead, the wire
+gate (``dist.exchange.effective_compression``) refuses every lossy mode
+(quantization error compounds under (+) — there is no safe rounding
+direction for a sum), and the engine's route-capacity retry ships only
+the contiguous edge prefix the cursor commits to (exactly-once delivery;
+see ``core/engine._phase1_create``).  A :class:`~repro.core.programs.
+VertexProgram` over a non-idempotent aggregator must also set
+``self_stabilizing=False`` (see ``core/faults.py``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +50,7 @@ INT_INF = jnp.iinfo(jnp.int32).max
 
 @dataclasses.dataclass(frozen=True)
 class Aggregator:
-    """One commutative/idempotent reduce ⊕ and everything derived from it.
+    """One commutative reduce ⊕ and everything derived from it.
 
     Instances are module-level singletons closed over by jit (hashable by
     identity, like the programs that carry them).
@@ -73,6 +83,11 @@ class Aggregator:
     # engine's bucketed queue is ascending, so descending-potential
     # aggregators invert their program's raw metric here
     priority_key: Callable
+    # a ⊕ a == a?  The §3.3 self-stabilization precondition.  False means:
+    # replay recovery refused (duplicates double-count), lossy wire modes
+    # gated to "none" (no safe rounding direction for a sum), and the
+    # engine's overflow retry restricted to exactly-once delivery.
+    idempotent: bool = True
 
 
 MIN = Aggregator(
@@ -85,6 +100,7 @@ MIN = Aggregator(
     segment_reduce=jax.ops.segment_min,
     tie=jnp.minimum,
     priority_key=lambda pv, scale: pv,
+    idempotent=True,
 )
 
 MAX = Aggregator(
@@ -97,6 +113,7 @@ MAX = Aggregator(
     segment_reduce=jax.ops.segment_max,
     tie=jnp.maximum,
     priority_key=lambda pv, scale: scale - pv,
+    idempotent=True,
 )
 
 OR = Aggregator(
@@ -109,26 +126,54 @@ OR = Aggregator(
     segment_reduce=jax.ops.segment_max,
     tie=jnp.maximum,
     priority_key=lambda pv, scale: scale - pv,
+    idempotent=True,
 )
 
-AGGREGATORS: dict[str, Aggregator] = {a.name: a for a in (MIN, MAX, OR)}
+SUM = Aggregator(
+    name="sum",
+    identity=lambda dtype: 0 if dtype == "int32" else 0.0,
+    scatter=lambda values, idx, vals: values.at[idx].add(vals, mode="drop"),
+    # (+) has no absorbing order, so "improves" degenerates to "changed"
+    # (used by demotion masks and output summaries; the fault manager's
+    # replay improves-loop can never see SUM — non-idempotent programs
+    # are refused replay recovery outright)
+    improves=lambda new, old: new != old,
+    # no safe rounding direction exists for an accumulating reduce —
+    # quantization error compounds with every (+) instead of being
+    # absorbed at the fixpoint; effective_compression gates every lossy
+    # mode to "none", so this field is never consulted
+    quantize_direction="none",
+    reduce=jnp.sum,
+    segment_reduce=jax.ops.segment_sum,
+    # a fresh pull-mode recomputation carries *absolute* sums that
+    # supersede the current state (the §3.3-safe PageRank formulation in
+    # kernels/ops.py) — never ⊕-merged against it
+    tie=lambda new, cur: new,
+    # push programs hand over an already-ascending potential (e.g.
+    # pagerank's -log2(pending mass): big mass -> small key -> propagate
+    # sooner), so the key passes through like MIN's
+    priority_key=lambda pv, scale: pv,
+    idempotent=False,
+)
+
+AGGREGATORS: dict[str, Aggregator] = {a.name: a for a in (MIN, MAX, OR, SUM)}
 
 # The kernel-layer semiring names (kernels/semiring_spmv.py) and the
-# aggregator each one's *reduce* is an instance of.  ``plus_times`` has
-# no aggregator: (+) is not idempotent, so no ASYMP vertex program may
-# use it as a receive-side reduce (PageRank goes through the pull-mode
-# recomputation in kernels/ops.py instead).
-SEMIRING_AGGREGATOR: dict[str, Optional[str]] = {
+# aggregator each one's *reduce* is an instance of.  ``plus_times``'s
+# reduce is the non-idempotent SUM: legal for pull-mode recomputation
+# (kernels/ops.py) and for the push-mode ``pagerank`` VertexProgram —
+# which, being non-idempotent, is routed to checkpoint-restore recovery
+# and a lossless wire (core/faults.py, dist/exchange.py).
+SEMIRING_AGGREGATOR: dict[str, str] = {
     "min": "min",
     "min_plus": "min",
     "max": "max",
     "max_min": "max",
     "or": "or",
-    "plus_times": None,
+    "plus_times": "sum",
 }
 
 
-def for_semiring(semiring: str) -> Optional[Aggregator]:
-    """The Aggregator behind a kernel semiring name (None = plus_times)."""
-    agg = SEMIRING_AGGREGATOR[semiring]
-    return AGGREGATORS[agg] if agg is not None else None
+def for_semiring(semiring: str) -> Aggregator:
+    """The Aggregator behind a kernel semiring name."""
+    return AGGREGATORS[SEMIRING_AGGREGATOR[semiring]]

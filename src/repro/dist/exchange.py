@@ -24,9 +24,12 @@ Both run the *same* wire codec so their results are bit-identical:
     decoded value never crosses the fixpoint from the wrong side.  Ids
     narrow to int16 whenever the shard width fits.
 
-``effective_compression`` is the gate: a requested mode that cannot be
-carried safely (e.g. int16 labels on a 10^6-vertex graph) falls back to
-``none`` rather than produce wrong fixpoints.
+``effective_compression`` is the gate — the single wire-safety decision
+point: a requested mode that cannot be carried safely (e.g. int16 labels
+on a 10^6-vertex graph, or ANY lossy mode under a non-idempotent
+aggregator like pagerank's SUM, whose quantization error would compound
+with every (+)) falls back to ``none`` rather than produce wrong
+fixpoints; an unknown mode raises ``ValueError``.
 
 **Deferred delivery (crowded-cluster emulation).**  Both transports also
 come in a *delayed* flavour (:func:`exchange_local_delayed` /
@@ -60,18 +63,36 @@ _INT_SENTINEL = {8: 127, 16: 32767}
 
 
 def effective_compression(requested: str, value_kind: str,
-                          max_int_value: int = 0) -> str:
+                          max_int_value: int = 0,
+                          idempotent: bool = True) -> str:
     """Gate a requested wire mode against what the payload can carry.
 
-    int payloads ("int32": CC labels, BFS hops) only narrow when every
-    real value stays below the sentinel code — otherwise distinct labels
-    would alias and the fixpoint would change, so we fall back to "none".
-    float payloads always admit quantization (lossy but safe, see module
-    docstring).
+    THE wire-safety decision point: every subsystem that picks a wire
+    mode (engine params, dry-run lowering, codec construction) routes
+    through this function, so there is exactly one place the rules live:
+
+    * an unknown mode is a config typo -> ``ValueError`` (never a bare
+      assert — the message names the valid modes);
+    * a non-idempotent aggregator (``idempotent=False``, e.g. pagerank's
+      SUM) admits NO lossy mode: quantization error compounds with every
+      (+) instead of being absorbed at the fixpoint, and neither ceil
+      nor floor is a safe rounding direction for a sum -> ``"none"``;
+    * int payloads ("int32": CC labels, BFS hops) only narrow when every
+      real value stays below the sentinel code — otherwise distinct
+      labels would alias and the fixpoint would change -> ``"none"``
+      (an int8 request on a graph whose labels fit int16 degrades to
+      int16 rather than all the way off);
+    * float payloads under an idempotent aggregator always admit
+      quantization (lossy but safe, see module docstring).
     """
     if requested in (None, "", "none"):
+        requested = "none"
+    elif requested not in ("int8", "int16"):
+        raise ValueError(
+            f"unknown wire_compression {requested!r}; "
+            f"valid modes: 'none', 'int16', 'int8'")
+    if requested == "none" or not idempotent:
         return "none"
-    assert requested in ("int8", "int16"), requested
     if value_kind == "float32":
         return requested
     bits = 8 if requested == "int8" else 16
@@ -144,8 +165,10 @@ class WireCodec:
 def make_wire_codec(num_shards: int, capacity: int, vs: int,
                     requested: str, value_kind: str, identity,
                     max_int_value: int = 0,
-                    quantize_direction: str = "up") -> WireCodec:
-    mode = effective_compression(requested, value_kind, max_int_value)
+                    quantize_direction: str = "up",
+                    idempotent: bool = True) -> WireCodec:
+    mode = effective_compression(requested, value_kind, max_int_value,
+                                 idempotent)
     return WireCodec(
         num_shards=num_shards, capacity=capacity, compression=mode,
         value_kind=value_kind, identity=float(identity)

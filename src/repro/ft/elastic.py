@@ -41,9 +41,28 @@ def repartition_state(state: EngineState, old_graph, new_graph) -> EngineState:
         out[: flat.shape[0]] = flat
         return jnp.asarray(out.reshape(new_p.num_shards, new_p.vs))
 
+    aux = None
+    if state.aux is not None:
+        # push-mode sidecar planes are per-vertex state and move verbatim,
+        # channel by channel.  The cursor reset below makes a resize safe
+        # only at a *quiescent* point for non-idempotent programs —
+        # restarting an in-flight push stream would re-ship its already-
+        # delivered prefix, silently double-counting mass under SUM — so
+        # enforce the precondition loudly instead of corrupting the run.
+        host_aux = np.asarray(state.aux)
+        if host_aux.shape[1] > 1 and np.any(host_aux[:, 1] != 0):
+            raise ValueError(
+                "repartition_state: push-mode program has latched pushes "
+                "in flight (aux[:, 1] != 0); resize only at a quiescent "
+                "point (drain the frontier first) — the cursor reset "
+                "would re-ship already-delivered message prefixes")
+        aux = jnp.stack([resplit(host_aux[:, ch], 0)
+                         for ch in range(host_aux.shape[1])], axis=1)
+
     return EngineState(
         values=resplit(state.values, np.asarray(state.values).max()),
         active=resplit(state.active, False),
         cursor=resplit(state.cursor, 0) * 0,  # cursors are CSR-relative
         tick=state.tick,
+        aux=aux,
     )

@@ -94,11 +94,9 @@ def build_pulled_graph(graph: ShardedGraph) -> PulledGraph:
 def _pull_step(values, edge_src, edge_dst_local, block_tile, weights, *,
                semiring: str, n_tiles: int, use_kernel: bool,
                use_mxu: bool, interpret: bool):
-    ident = _identity(semiring, values.dtype)
+    ident = _identity(semiring, values.dtype)  # plus_times/SUM: 0
     safe_src = jnp.clip(edge_src, 0, values.shape[0] - 1)
     vals = jnp.where(edge_src >= 0, values[safe_src], ident)
-    if semiring == "plus_times":
-        vals = jnp.where(edge_src >= 0, vals, 0.0)
     if use_kernel:
         partials = spmv_partials(vals, edge_dst_local, weights,
                                  semiring=semiring, use_mxu=use_mxu,
@@ -107,13 +105,9 @@ def _pull_step(values, edge_src, edge_dst_local, block_tile, weights, *,
         partials = ref_mod.spmv_partials_ref(vals, edge_dst_local, weights,
                                              semiring=semiring)
     # combine per-block partials into per-tile outputs
-    if semiring == "plus_times":
-        tiles = jax.ops.segment_sum(partials, block_tile,
-                                    num_segments=n_tiles)
-    else:
-        agg = for_semiring(semiring)
-        tiles = agg.segment_reduce(partials, block_tile,
-                                   num_segments=n_tiles)
+    agg = for_semiring(semiring)
+    tiles = agg.segment_reduce(partials, block_tile, num_segments=n_tiles)
+    if agg.idempotent:  # clamp empty/out-of-domain lanes at the identity
         tiles = agg.tie(tiles, ident)
     return tiles.reshape(n_tiles * TILE)
 
@@ -124,8 +118,9 @@ def frontier_pull_step(values: jnp.ndarray, pg: PulledGraph, *,
                        interpret: bool = True) -> jnp.ndarray:
     """One full propagation: out[v] = reduce over in-edges combine(src, w).
 
-    For idempotent (aggregator-backed) semirings the result is further
-    tied against the current values (the self-stabilizing update)."""
+    For idempotent semirings the result is further tied against the
+    current values (the self-stabilizing update); the non-idempotent
+    plus_times/SUM result is absolute and supersedes."""
     vpad = pg.num_vertices - values.shape[0]
     v = jnp.pad(values, (0, vpad), constant_values=_identity(semiring,
                                                              values.dtype)
@@ -137,15 +132,16 @@ def frontier_pull_step(values: jnp.ndarray, pg: PulledGraph, *,
                      semiring=semiring, n_tiles=pg.n_tiles,
                      use_kernel=use_kernel, use_mxu=use_mxu,
                      interpret=interpret)
-    if semiring != "plus_times":
-        out = for_semiring(semiring).tie(out, v)
+    agg = for_semiring(semiring)
+    if agg.idempotent:
+        out = agg.tie(out, v)
     return out[: values.shape[0]] if vpad else out
 
 
 # ======================================================================
 def pagerank(graph: ShardedGraph, *, damping: float = 0.85,
              iters: int = 30, use_kernel: bool = True,
-             interpret: bool = True):
+             interpret: bool = True, dangling: str = "redistribute"):
     """PageRank in the paper's §3.3-safe formulation.
 
     A push-mode asynchronous PageRank with (+) messages is NOT idempotent —
@@ -154,7 +150,20 @@ def pagerank(graph: ShardedGraph, *, damping: float = 0.85,
     neighbor) is equivalent to *pull-mode recomputation from absolute
     neighbor states*, which is what the plus_times semiring pull step
     computes: rank_v = (1-d) + d * sum_in rank_u / deg_u.  Messages are
-    absolute and supersede — replay-safe by construction."""
+    absolute and supersede — replay-safe by construction.
+
+    ``dangling`` picks the zero-out-degree convention:
+
+      * ``"redistribute"`` — a dangling vertex's damped mass teleports
+        uniformly (the classic normalization; ranks sum to 1);
+      * ``"absorb"`` — the damped share of a dangling vertex simply
+        evaporates (a zero row in the transition matrix).  This is the
+        fixpoint the engine's push-mode ``pagerank`` VertexProgram
+        converges to — a push at a degree-0 vertex has no edge to send
+        on — so it is the oracle the exactly-once tests validate against
+        (engine ranks are unnormalized: engine/n_real == this).
+    """
+    assert dangling in ("redistribute", "absorb"), dangling
     pg = build_pulled_graph(graph)
     n, n_real = pg.num_vertices, graph.num_real_vertices
     deg_raw = graph.degrees().reshape(-1).astype(np.float32)
@@ -168,10 +177,10 @@ def pagerank(graph: ShardedGraph, *, damping: float = 0.85,
         pulled = frontier_pull_step(contrib, pg, semiring="plus_times",
                                     use_kernel=use_kernel,
                                     interpret=interpret)
-        # dangling vertices redistribute their mass uniformly
-        dangling = jnp.sum(jnp.where(dangling_mask, rank, 0.0))
-        rank = ((1 - damping) / n_real
-                + damping * (pulled + dangling / n_real))
+        if dangling == "redistribute":
+            dm = jnp.sum(jnp.where(dangling_mask, rank, 0.0))
+            pulled = pulled + dm / n_real
+        rank = (1 - damping) / n_real + damping * pulled
         rank = rank.at[n_real:].set(0.0)
     return rank[:n_real]
 

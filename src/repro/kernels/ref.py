@@ -1,9 +1,6 @@
 """Pure-jnp oracles for the semiring SpMV kernel."""
 from __future__ import annotations
 
-from typing import Optional
-
-import jax
 import jax.numpy as jnp
 
 from repro.core.semiring import for_semiring
@@ -22,15 +19,15 @@ def spmv_partials_ref(edge_vals, edge_dst_local, edge_weights, *,
     block = jnp.arange(n) // EDGE_BLOCK
     dst = edge_dst_local.astype(jnp.int32)
     seg = jnp.where(dst >= 0, block * TILE + dst, n_blocks * TILE)
-    if semiring == "plus_times":
-        flat = jax.ops.segment_sum(cand, seg, num_segments=n_blocks * TILE + 1)
-    else:
-        agg = for_semiring(semiring)
-        flat = agg.segment_reduce(cand, seg, num_segments=n_blocks * TILE + 1)
+    agg = for_semiring(semiring)
+    flat = agg.segment_reduce(cand, seg, num_segments=n_blocks * TILE + 1)
+    if agg.idempotent:
         # clamp at the aggregation identity: empty segments (dtype-extreme
         # filled) become the identity, and payloads outside the
         # aggregator's domain (e.g. negative values under MAX) clamp to it
         # — exactly what the kernel's masked identity fill computes
+        # (plus_times/SUM needs no clamp: segment_sum fills empties with 0,
+        # which IS its identity)
         flat = agg.tie(flat, _identity(semiring, dtype))
     return flat[:-1].reshape(n_blocks, TILE)
 
@@ -45,12 +42,8 @@ def full_propagation_ref(values, edge_src, edge_dst, edge_weights, *,
     cand = _combine(semiring, vals, edge_weights.astype(vals.dtype))
     valid = edge_dst >= 0
     seg = jnp.where(valid, edge_dst, num_vertices)
-    if semiring == "plus_times":
-        out = jax.ops.segment_sum(jnp.where(valid, cand, 0), seg,
-                                  num_segments=num_vertices + 1)[:-1]
-        return out
     agg = for_semiring(semiring)
     ident = _identity(semiring, values.dtype)
     out = agg.segment_reduce(jnp.where(valid, cand, ident), seg,
                              num_segments=num_vertices + 1)[:-1]
-    return agg.tie(out, ident)
+    return agg.tie(out, ident) if agg.idempotent else out

@@ -52,9 +52,7 @@ SEMIRINGS = ("min", "min_plus", "max", "max_min", "or", "plus_times")
 
 
 def _identity(semiring: str, dtype):
-    agg = for_semiring(semiring)
-    if agg is None:  # plus_times: (+)-identity
-        return jnp.zeros((), dtype)
+    agg = for_semiring(semiring)  # plus_times -> SUM ((+)-identity 0)
     kind = ("int32" if jnp.issubdtype(jnp.dtype(dtype), jnp.integer)
             else "float32")
     return jnp.array(agg.identity(kind), dtype)

@@ -7,6 +7,9 @@ per-tick metrics log.
   python -m repro.launch.graph_mine --config asymp_cc [--failures 0.5]
   python -m repro.launch.graph_mine --config asymp_sssp --out /tmp/sssp.tsv
   python -m repro.launch.graph_mine --algorithm widest_path --source 7
+  python -m repro.launch.graph_mine --config asymp_pagerank --reduced \
+      --failures 0.5                # checkpoint-restore recovery (non-
+                                    # idempotent SUM aggregation)
   python -m repro.launch.graph_mine --config asymp_cc --slowdown 0.5 \
       --latency-profile stragglers      # crowded-cluster emulation (§5.4)
 """
@@ -124,6 +127,12 @@ def main() -> None:
         summary = f"components={len(np.unique(out))}"
     elif cfg.algorithm == "reachability":
         summary = f"reached={int(np.sum(out))}"
+    elif cfg.algorithm == "pagerank":
+        # unnormalized ranks: mass/n == 1 iff no probability leaked at
+        # degree-0 vertices (the push program's absorb convention)
+        out_f = out.astype(np.float64)
+        summary = (f"mass={out_f.sum() / len(out):.4f};"
+                   f"top={int(out_f.argmax())}")
     else:  # distance/width-valued programs: unreached = the identity
         out_f = out.astype(np.float64)
         reached = np.asarray(prog.aggregator.improves(out_f,

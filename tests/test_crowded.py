@@ -178,14 +178,20 @@ class TestDelayedExchange:
 class TestCrowdedFixpoints:
     """§3.3 under emulated crowding: delayed + reordered delivery (and
     throttled budgets) must leave the fixpoint bit-identical to the
-    zero-latency run, for EVERY registered program x EVERY profile."""
+    zero-latency run for every idempotent program x EVERY profile.  The
+    non-idempotent pagerank (float SUM) has no bitwise claim — reordered
+    (+) moves low bits — but delivery through the ring is exactly-once,
+    so the fixpoint stays inside the push_eps error ball."""
 
     @settings(max_examples=8, deadline=None)
     @given(st.sampled_from(sorted(PR.PROGRAMS)),
            st.sampled_from(PROFILES), st.integers(0, 10))
     def test_fixpoint_invariant_under_latency(self, name, profile, seed):
-        cfg = _cfg(name, seed=seed)
+        small = ({"num_vertices": 256, "avg_degree": 4}
+                 if name == "pagerank" else {})
+        cfg = _cfg(name, seed=seed, **small)
         g = G.build_sharded_graph(cfg)
+        prog = PR.get_program(cfg)
         _, base, t0 = _run(cfg, graph=g)
         assert t0["converged"]
         lat = L.make_latency_model(profile, cfg.num_shards,
@@ -193,7 +199,13 @@ class TestCrowdedFixpoints:
                                    intensity=3, seed=seed)
         _, out, tot = _run(cfg, graph=g, latency=lat)
         assert tot["converged"] and tot["pending"] == 0, (name, profile)
-        np.testing.assert_array_equal(out, base)
+        if prog.aggregator.idempotent:
+            np.testing.assert_array_equal(out, base)
+        else:
+            n = g.num_real_vertices
+            l1 = float(np.abs(out.astype(np.float64) / n
+                              - base.astype(np.float64) / n).sum())
+            assert l1 < 2 * prog.push_eps / (1 - 0.85), (profile, l1)
 
     def test_ring_defers_then_drains(self):
         """Uniform link delay: messages visibly queue in the ring
@@ -245,6 +257,27 @@ class TestSlowdownInjection:
         base_t = np.full((4,), 3, np.int32)
         d, t = apply_slowdown(plan, 0, base_d, base_t)
         assert (d == 2).all() and (t == 3).all()  # max(base, injected)
+
+    def test_overlay_cache_tracks_plan_mutation(self):
+        """Regression: the overlay cache used to be keyed only on the
+        base arrays' identities, so mutating a plan's slow_delay /
+        slow_fraction / slow_intensity between runs served the stale
+        overlay of the old field values."""
+        plan = FaultPlan(fail_fraction=0.0, slow_fraction=1.0, slow_delay=2,
+                         slow_intensity=3, slow_start=0)
+        base_d = np.zeros((4, 4), np.int32)
+        base_t = np.ones((4,), np.int32)
+        d, t = apply_slowdown(plan, 0, base_d, base_t)
+        assert (d == 2).all() and (t == 3).all()
+        plan.slow_delay, plan.slow_intensity = 5, 7
+        d, t = apply_slowdown(plan, 0, base_d, base_t)
+        assert (d == 5).all() and (t == 7).all()  # not the stale overlay
+        plan.slow_fraction = 0.5
+        d, t = apply_slowdown(plan, 0, base_d, base_t)
+        assert (d == 5).any() and (d == 0).any()  # re-seeded shard choice
+        # and the identity fast path still caches: same plan, same bases
+        d2, t2 = apply_slowdown(plan, 1, base_d, base_t)
+        assert d2 is d and t2 is t
 
     def test_slowdown_alone_converges_to_exact_fixpoint(self):
         """A slowdown-only plan (no kills) crowds half the shards mid-run;

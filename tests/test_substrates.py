@@ -252,9 +252,27 @@ class TestExchange:
         assert X.effective_compression("int16", "int32", 10 ** 6) == "none"
         # int8 request on a 10k-label graph degrades to int16, not none
         assert X.effective_compression("int8", "int32", 10 ** 4) == "int16"
-        # float payloads always admit quantization (lossy-but-safe)
+        # float payloads always admit quantization (lossy-but-safe)...
         assert X.effective_compression("int8", "float32") == "int8"
         assert X.effective_compression("none", "int32", 5) == "none"
+        # ...UNLESS the aggregator is non-idempotent: quantization error
+        # compounds under (+), so every lossy mode gates to none
+        assert X.effective_compression("int8", "float32",
+                                       idempotent=False) == "none"
+        assert X.effective_compression("int16", "int32", 5,
+                                       idempotent=False) == "none"
+
+    def test_unknown_wire_mode_raises_value_error(self):
+        """A typo'd GraphConfig.wire_compression must not die with a
+        bare AssertionError; the error names the valid modes."""
+        import pytest
+        from repro.dist import exchange as X
+        with pytest.raises(ValueError, match="'none', 'int16', 'int8'"):
+            X.effective_compression("int32", "int32", 5)
+        with pytest.raises(ValueError):
+            X.make_wire_codec(num_shards=2, capacity=4, vs=8,
+                              requested="gzip", value_kind="int32",
+                              identity=0)
 
     def test_float_wire_never_underestimates(self):
         """Ceil-rounded quantization: decoded >= original (min-semiring
