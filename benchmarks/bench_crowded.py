@@ -29,11 +29,19 @@ Schedulers compared under the *same* seeded latency profile:
     (``straggler_demote``; a tie-breaker under constant link delays,
     where each link preserves its own message order).
 
+A second axis compares *schedules* under the same seeded crowding: the
+BSP-style global tick barrier (``schedule=sync``) against the
+barrier-free async mode (``schedule=async``), where each shard fires on
+its own seeded clock and a rate-k firing carries k steps' worth of edge
+window (cycle-scaled resources).
+
 ``--smoke`` is the CI gate: it asserts the §5.4 shape (50% slow shards
-=> degradation ratio < 2x, priority strictly beating FIFO) and that the
+=> degradation ratio < 2x, priority strictly beating FIFO), that the
 converged fixpoint under EVERY latency profile is bit-identical to the
 zero-latency run for EVERY registered program (§3.3 self-stabilization
-under delayed + reordered delivery).
+under delayed + reordered delivery), and that the async schedule's
+straggler degradation is no worse than the BSP baseline on the same
+seeded profile.
 
     PYTHONPATH=src python -m benchmarks.bench_crowded --smoke
     PYTHONPATH=src python -m benchmarks.bench_crowded
@@ -164,10 +172,26 @@ def smoke() -> None:
         "smoke: priority scheduling must strictly beat FIFO when crowded"
     assert prio["crowded"]["sent"] < fifo["crowded"]["sent"], \
         "smoke: priority scheduling must send fewer messages when crowded"
+
+    # barrier-free schedule gate: on the SAME seeded crowding, dropping
+    # the global tick barrier must not degrade worse than BSP does —
+    # healthy shards keep firing every emulated step while crowded ones
+    # burst cycle-scaled windows on their own clock
+    asyn = degradation(dataclasses.replace(cfg, schedule="async"), g)
+    emit("smoke/crowded/async", asyn["crowded"]["wall_s"] * 1e6,
+         f"ticks_healthy={asyn['healthy']['ticks']};"
+         f"ticks_crowded={asyn['crowded']['ticks']};"
+         f"degradation_x={asyn['ratio']:.2f}")
+    assert asyn["healthy"]["ticks"] == prio["healthy"]["ticks"], \
+        "smoke: async on a healthy cluster must match the BSP tick count"
+    assert asyn["ratio"] <= prio["ratio"], \
+        (f"smoke: async degraded {asyn['ratio']:.2f}x under 50% slow "
+         f"shards — worse than the BSP barrier's {prio['ratio']:.2f}x")
     print("== smoke OK: degradation "
           f"{prio['ratio']:.2f}x < 2x with 50% slow shards; priority "
           f"{prio['crowded']['ticks']} ticks < FIFO "
-          f"{fifo['crowded']['ticks']} ticks under the same profile ==")
+          f"{fifo['crowded']['ticks']} ticks under the same profile; "
+          f"async {asyn['ratio']:.2f}x <= BSP {prio['ratio']:.2f}x ==")
 
 
 def main() -> None:
@@ -194,6 +218,16 @@ def main() -> None:
                        dict(priority="log", straggler_demote=0))]:
         d = degradation(dataclasses.replace(cfg, **kw), g)
         emit(f"crowded/sched/{label}", d["crowded"]["wall_s"] * 1e6,
+             f"ticks_healthy={d['healthy']['ticks']};"
+             f"ticks_crowded={d['crowded']['ticks']};"
+             f"degradation_x={d['ratio']:.2f};"
+             f"messages_crowded={d['crowded']['sent']}")
+
+    print("-- schedule comparison: async vs the BSP barrier "
+          "(priority scheduler, same seeded crowding) --")
+    for label, sched in [("bsp", "sync"), ("async", "async")]:
+        d = degradation(dataclasses.replace(cfg, schedule=sched), g)
+        emit(f"crowded/schedule/{label}", d["crowded"]["wall_s"] * 1e6,
              f"ticks_healthy={d['healthy']['ticks']};"
              f"ticks_crowded={d['crowded']['ticks']};"
              f"degradation_x={d['ratio']:.2f};"

@@ -292,6 +292,15 @@ class GraphConfig:
     # straggler-aware scheduling: bucket penalty demoting frontier work
     # that was activated over a slow link (0 = plain priority queue)
     straggler_demote: int = 8
+    # execution schedule: "sync" = BSP-style global tick barrier;
+    # "async" = barrier-free per-shard progress under a deterministic
+    # seeded interleaving (dist/latency.py AsyncInterleaving) — throttle
+    # is consumed as a firing rate instead of a budget divisor
+    schedule: str = "sync"
+    async_seed: int = 0
+    # jitter: seeded stateless skips for rate-1 shards (never twice in a
+    # row), decorrelating "healthy" shards' steps while staying replayable
+    async_jitter: bool = False
     # source vertex for single-source programs (sssp/bfs/reachability/
     # widest_path); ignored by the others
     source: int = 0

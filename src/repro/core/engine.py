@@ -154,7 +154,8 @@ def priority_buckets(pv: jnp.ndarray, strategy: str, scale: float) -> jnp.ndarra
 # ======================================================================
 def _phase1_create(prog, ep: EngineParams, values, active, cursor,
                    row_ptr, col_idx, weights, shard_id,
-                   throttle=None, demote=None, aux=None):
+                   throttle=None, demote=None, aux=None,
+                   stream_window=None):
     """Select + fetch + create + route. Returns ``(active, cursor,
     send_vals, send_ids, sent, fetched, values, aux)`` — values/aux ride
     at the END so callers of the historical 6-tuple still unpack; they
@@ -170,6 +171,13 @@ def _phase1_create(prog, ep: EngineParams, values, active, cursor,
         threshold machinery still selects them when nothing healthier
         remains, so no vertex starves and the fixpoint cannot move
         (selection order is covered by §3.3 reordering invariance).
+      * ``stream_window`` — scalar cap on edges fetched per selected
+        vertex this call (``<= ep.degree_window``, the static array
+        width).  The async schedule compiles a widened window and passes
+        ``rate * D`` per shard: one firing of a rate-k shard is k steps'
+        worth of edge streaming, delivered at once — without this a
+        high-degree vertex on a crowded shard drains k times slower
+        than under the budget-divisor (sync) emulation.
 
     Push mode (``aux is not None``; non-idempotent aggregators): instead
     of propagating its absolute value, a selected vertex *moves mass*.
@@ -231,6 +239,19 @@ def _phase1_create(prog, ep: EngineParams, values, active, cursor,
                                             mode="drop")
     sel_valid = jnp.zeros((M,), bool).at[
         jnp.where(sel_mask, rank_v, M)].set(True, mode="drop")
+    # overflow slots go to the best buckets first: the two-tier rank above
+    # is vertex-index order WITHIN each tier, and the routing rank below is
+    # a stable sort over flat slot order — so under starved route capacity
+    # the kept prefix used to be the low-vertex-index work, not the
+    # high-priority work (backpressured pagerank lost its big-mass-first
+    # schedule).  A stable argsort over the M slots by bucket restores the
+    # priority order; with priority disabled every bucket is 0 and the
+    # permutation is the identity (FIFO semantics untouched).
+    slot_bucket = jnp.where(sel_valid, buckets[jnp.minimum(sel, vs - 1)],
+                            N_BUCKETS)
+    reorder = jnp.argsort(slot_bucket)  # stable; invalid slots sort last
+    sel = sel[reorder]
+    sel_valid = sel_valid[reorder]
     sel_safe = jnp.minimum(sel, vs - 1)  # for gathers
 
     # ---- fetch adjacency window (streamed via cursor) ----
@@ -241,6 +262,8 @@ def _phase1_create(prog, ep: EngineParams, values, active, cursor,
     eidx = base[:, None] + offs[None, :]
     edge_valid = sel_valid[:, None] & ((cur[:, None] + offs[None, :])
                                        < deg[:, None])
+    if stream_window is not None:
+        edge_valid = edge_valid & (offs[None, :] < stream_window)
     eidx_safe = jnp.clip(eidx, 0, col_idx.shape[0] - 1)
     dst = jnp.where(edge_valid, col_idx[eidx_safe], -1)  # global ids
     w = weights[eidx_safe] if weights is not None else None
@@ -273,6 +296,10 @@ def _phase1_create(prog, ep: EngineParams, values, active, cursor,
     dropped = edge_valid & ~keep
     any_drop = dropped.any(axis=1)
     first_drop = jnp.where(any_drop, jnp.argmax(dropped, axis=1), D)
+    if stream_window is not None:
+        # the cursor must stop at the window even with no routing drop:
+        # edges past it were never fetched this call
+        first_drop = jnp.minimum(first_drop, stream_window)
     if push_mode:
         # exactly-once: ship ONLY the contiguous prefix the cursor will
         # advance past.  A kept edge after the first drop is re-fetched
@@ -672,6 +699,270 @@ def make_crowded_dist_tick(prog, ep: EngineParams, mesh: Mesh,
 
 
 # ======================================================================
+# Asynchronous (barrier-free) execution: per-shard progress clocks
+# ======================================================================
+class AsyncState(NamedTuple):
+    """State of one async run.  ``core.tick`` stays the *emulated
+    wall-clock* step (it keys the delay-ring slots — latency cannot be
+    emulated without a wall clock); the per-shard logical ``clock``
+    replaces it everywhere progress semantics matter: recovery cuts,
+    convergence accounting, the metrics log."""
+    core: EngineState
+    ring: ex_mod.DelayRing  # in-flight messages (arrivals queue here)
+    demote: jnp.ndarray  # [P, vs] bool — carried until the shard fires
+    clock: jnp.ndarray  # [P] int32 — firings incorporated into `core`
+
+
+class AsyncStats(NamedTuple):
+    base: TickStats
+    pending: jnp.ndarray  # messages still in flight (all shards)
+    shard_active: jnp.ndarray  # [P] frontier size per shard
+    shard_pending: jnp.ndarray  # [P] in-flight messages bound for shard
+    clock: jnp.ndarray  # [P] logical clocks after this step
+
+
+def async_ring_delay(max_delay: int, max_stall: int) -> int:
+    """Ring sizing for async mode, as a ``max_delay``-equivalent.
+
+    The synchronous rule (``max_delay + 1`` slots) is a staleness bug
+    under per-shard clocks: a message due at step ``t`` is only consumed
+    when its receiver fires, up to ``max_stall - 1`` steps later, and
+    the sender would overwrite its slot at ``t + ring_len``.  The async
+    ring therefore needs ``max_delay + max_stall`` slots."""
+    return max_delay + max(int(max_stall), 1) - 1
+
+
+def init_async_state(prog, ep: EngineParams, graph: ShardedGraph,
+                     ring_delay: int) -> AsyncState:
+    """``ring_delay`` comes from :func:`async_ring_delay` (max link delay
+    widened by the interleaving's stall bound)."""
+    return AsyncState(
+        init_state(prog, graph),
+        ex_mod.init_delay_ring(ring_delay, ep.num_shards, ep.num_shards,
+                               ep.route_capacity, prog.identity,
+                               prog.jdtype),
+        jnp.zeros((ep.num_shards, ep.vs), bool),
+        jnp.zeros((ep.num_shards,), jnp.int32))
+
+
+def make_async_tick(prog, ep: EngineParams, weighted: bool):
+    """Barrier-free step over the local transport.
+
+    ``tick(astate, g, delays, fire)`` — ``fire [P]`` bool is the step's
+    seeded firing mask (``dist.latency.AsyncInterleaving``).  A firing
+    shard drains its due ring arrivals, selects frontier work with its
+    FULL edge budget (throttle is a progress rate here, not a budget
+    divisor) and pushes new messages; a non-firing shard keeps its state
+    verbatim, contributes empty send buffers, and its inbound due rows
+    stay parked (``recv_gate``).  Convergence is per shard: every
+    shard's frontier empty AND every shard's inbound ring drained
+    (``shard_active + shard_pending == 0`` for all shards)."""
+    codec = wire_codec(prog, ep)
+    agg = prog.aggregator
+    push_mode = not agg.idempotent
+
+    def tick(astate: AsyncState, g: ShardGraph, delays, fire, window=None):
+        state = astate.core
+        shard_ids = jnp.arange(ep.num_shards)
+        w = g.weights if weighted else None
+        aux = state.aux if push_mode else None
+        if window is None:  # full static window for every shard
+            window = jnp.full((ep.num_shards,), ep.degree_window,
+                              jnp.int32)
+
+        p1v = jax.vmap(
+            lambda v, a, c, r, ci, wt, s, d_, ax, w_: _phase1_create(
+                prog, ep, v, a, c, r, ci, wt, s, demote=d_, aux=ax,
+                stream_window=w_),
+            in_axes=(0, 0, 0, 0, 0, 0 if weighted else None, 0, 0,
+                     0 if push_mode else None, 0))
+        active1, cursor1, sv, si, sent, fetched, values1, aux1 = p1v(
+            state.values, state.active, state.cursor, g.row_ptr,
+            g.col_idx, w, shard_ids, astate.demote, aux, window)
+
+        # only firing shards advance: the rest keep their state verbatim
+        # and send nothing this step
+        fire_v = fire[:, None]
+        values = jnp.where(fire_v, values1, state.values)
+        active = jnp.where(fire_v, active1, state.active)
+        cursor = jnp.where(fire_v, cursor1, state.cursor)
+        if push_mode:
+            aux = jnp.where(fire[:, None, None], aux1, state.aux)
+        sv = jnp.where(fire[:, None, None], sv,
+                       jnp.asarray(prog.identity, sv.dtype))
+        si = jnp.where(fire[:, None, None], si, -1)
+        sent = jnp.where(fire, sent, 0)
+        fetched = jnp.where(fire, fetched, 0)
+
+        # exchange: park sends, pop keyed on the RECEIVERS' clocks — a
+        # due row surfaces only on a step its destination shard fires
+        rv, ri, ring, pending = ex_mod.exchange_local_delayed(
+            codec, astate.ring, sv, si, state.tick, delays, prog.identity,
+            recv_gate=fire)
+
+        # phase 2 needs no fire masking: a gated (non-firing) receiver's
+        # rows arrive empty (ids -1 / identity), and the receive phase is
+        # an exact no-op on empty buffers
+        if push_mode:
+            old_plane = aux[:, 0]
+            p2v = jax.vmap(lambda res, a, rvals, rids: _phase2_receive_push(
+                prog, ep, res, a, rvals, rids))
+            residual, active, accepted = p2v(old_plane, active, rv, ri)
+            aux = aux.at[:, 0].set(residual)
+            new_plane = residual
+        else:
+            old_plane = values
+            p2v = jax.vmap(lambda v, a, c, rvals, rids:
+                           _phase2_receive(prog, ep, v, a, c, rvals, rids))
+            values, active, cursor, accepted = p2v(values, active, cursor,
+                                                   rv, ri)
+            aux = aux if push_mode else state.aux
+            new_plane = values
+        if ep.straggler_demote:
+            slow_rows = _slow_recv_rows(ep, ri.shape[1], delays)
+            new_demote = jax.vmap(lambda nv, ov, rids, srow: _demote_row(
+                agg, ep, nv, ov, rids, srow))(new_plane, old_plane, ri,
+                                              slow_rows)
+            # a non-firing shard carries its pending demotions to its
+            # next firing instead of forgetting them (the sync tick
+            # recomputes every tick because every shard fires every tick)
+            demote = jnp.where(fire_v, new_demote, astate.demote)
+        else:
+            demote = jnp.zeros_like(astate.demote)
+
+        clock = astate.clock + fire.astype(jnp.int32)
+        inflight = (ring.ids >= 0) & (ring.due >= 0)[..., None]
+        shard_pending = jnp.sum(inflight, axis=(0, 1, 3))
+        stats = TickStats(jnp.sum(active), jnp.sum(sent),
+                          jnp.sum(accepted), jnp.sum(fetched))
+        astats = AsyncStats(stats, pending, jnp.sum(active, axis=1),
+                            shard_pending, clock)
+        core = EngineState(values, active, cursor, state.tick + 1, aux)
+        return AsyncState(core, ring, demote, clock), astats, (sv, si)
+
+    return jax.jit(tick)
+
+
+def init_async_dist_state(prog, ep: EngineParams, graph: ShardedGraph,
+                          ring_delay: int) -> AsyncState:
+    """Like :func:`init_async_state` but with the per-shard (sender-side)
+    ring layout the dist transport rings: [P, ring_len, Pn, cap]."""
+    L1 = ring_delay + 1
+    Pn, cap = ep.num_shards, ep.route_capacity
+    return AsyncState(
+        init_state(prog, graph),
+        ex_mod.DelayRing(
+            jnp.full((Pn, L1, Pn, cap), prog.identity, prog.jdtype),
+            jnp.full((Pn, L1, Pn, cap), -1, jnp.int32),
+            jnp.full((Pn, L1, Pn), -1, jnp.int32)),
+        jnp.zeros((Pn, ep.vs), bool),
+        jnp.zeros((Pn,), jnp.int32))
+
+
+def make_async_dist_tick(prog, ep: EngineParams, mesh: Mesh,
+                         weighted: bool):
+    """Async step over ``shard_map``: the production transport with the
+    same per-shard-clock semantics (and bit-identical delivery order) as
+    :func:`make_async_tick`.  ``delays [P, Pn]`` and ``fire [P]`` ride
+    replicated — every sender gates its per-receiver ring rows on the
+    full firing vector."""
+    axis = "workers"
+    codec = wire_codec(prog, ep)
+    agg = prog.aggregator
+    push_mode = not agg.idempotent
+
+    def local_fn(values, active, cursor, tick, aux, rv_ring, ri_ring,
+                 rd_ring, demote, clock, row_ptr, col_idx, weights, delays,
+                 fire, window):
+        sid = jax.lax.axis_index(axis)
+        old_v, old_a, old_c = values[0], active[0], cursor[0]
+        aux_row = aux[0] if push_mode else None
+        ring = ex_mod.DelayRing(rv_ring[0], ri_ring[0], rd_ring[0])
+        w = weights[0] if weighted else None
+        f = fire[sid]
+        active1, cursor1, sv, si, sent, fetched, values1, aux1 = \
+            _phase1_create(prog, ep, old_v, old_a, old_c, row_ptr[0],
+                           col_idx[0], w, sid, demote=demote[0],
+                           aux=aux_row, stream_window=window[sid])
+        values = jnp.where(f, values1, old_v)
+        active = jnp.where(f, active1, old_a)
+        cursor = jnp.where(f, cursor1, old_c)
+        if push_mode:
+            aux_row = jnp.where(f, aux1, aux_row)
+        sv = jnp.where(f, sv, jnp.asarray(prog.identity, sv.dtype))
+        si = jnp.where(f, si, -1)
+        sent = jnp.where(f, sent, 0)
+        fetched = jnp.where(f, fetched, 0)
+        rv, ri, ring, pending = ex_mod.exchange_dist_delayed(
+            codec, ring, sv, si, tick, delays[sid], axis, prog.identity,
+            recv_gate=fire)
+        if push_mode:
+            old_plane = aux_row[0]
+            residual, active, accepted = _phase2_receive_push(
+                prog, ep, old_plane, active, rv, ri)
+            aux_row = aux_row.at[0].set(residual)
+            new_plane, aux_out = residual, aux_row[None]
+        else:
+            old_plane = values
+            values, active, cursor, accepted = _phase2_receive(
+                prog, ep, values, active, cursor, rv, ri)
+            new_plane, aux_out = values, aux
+        if ep.straggler_demote:
+            srow = delays[jnp.arange(ri.shape[0], dtype=jnp.int32)
+                          % ep.num_shards, sid] > 0
+            dem = _demote_row(agg, ep, new_plane, old_plane, ri, srow)
+            dem = jnp.where(f, dem, demote[0])
+        else:
+            dem = jnp.zeros_like(demote[0])
+        new_clock = clock[0] + f.astype(jnp.int32)
+        inflight = (ring.ids >= 0) & (ring.due >= 0)[..., None]
+        shard_pending = jax.lax.psum(jnp.sum(inflight, axis=(0, 2)), axis)
+        stats = TickStats(jax.lax.psum(jnp.sum(active), axis),
+                          jax.lax.psum(sent, axis),
+                          jax.lax.psum(accepted, axis),
+                          jax.lax.psum(fetched, axis))
+        pending = jax.lax.psum(pending, axis)
+        return (values[None], active[None], cursor[None], tick + 1,
+                aux_out, ring.vals[None], ring.ids[None], ring.due[None],
+                dem[None], new_clock[None], stats, pending,
+                jnp.sum(active)[None], shard_pending)
+
+    def tick_fn(astate: AsyncState, g: ShardGraph, delays, fire,
+                window=None):
+        state = astate.core
+        if window is None:  # full static window for every shard
+            window = jnp.full((ep.num_shards,), ep.degree_window,
+                              jnp.int32)
+        Pw = P(axis)
+        aux_spec = Pw if push_mode else P()
+        sm = shard_map(
+            local_fn, mesh=mesh,
+            in_specs=(Pw, Pw, Pw, P(), aux_spec, Pw, Pw, Pw, Pw, Pw, Pw,
+                      Pw, Pw if weighted else P(), P(), P(), P()),
+            out_specs=(Pw, Pw, Pw, P(), aux_spec, Pw, Pw, Pw, Pw, Pw,
+                       TickStats(P(), P(), P(), P()), P(), Pw, P()),
+            check_vma=False)
+        weights = g.weights if weighted else jnp.zeros((), jnp.float32)
+        aux_in = state.aux if push_mode else jnp.zeros((), jnp.float32)
+        (values, active, cursor, tick, aux, rvr, rir, rdr, demote, clock,
+         stats, pending, shard_active, shard_pending) = sm(
+            state.values, state.active, state.cursor, state.tick, aux_in,
+            astate.ring.vals, astate.ring.ids, astate.ring.due,
+            astate.demote, astate.clock, g.row_ptr, g.col_idx, weights,
+            delays, fire, window)
+        core = EngineState(values, active, cursor, tick,
+                           aux if push_mode else state.aux)
+        astats = AsyncStats(stats, pending, shard_active, shard_pending,
+                            clock)
+        return (AsyncState(core, ex_mod.DelayRing(rvr, rir, rdr), demote,
+                           clock), astats)
+
+    # jitted like make_async_tick (host drivers step it thousands of
+    # times); lower_tick_for_mesh re-wraps for donation, which collapses
+    return jax.jit(tick_fn)
+
+
+# ======================================================================
 # Host driver helpers
 # ======================================================================
 def init_state(prog, graph: ShardedGraph) -> EngineState:
@@ -696,7 +987,8 @@ def run_to_convergence(cfg: GraphConfig, *, graph: Optional[ShardedGraph] = None
                        prog=None, params: Optional[EngineParams] = None,
                        max_ticks: Optional[int] = None,
                        collect_log: bool = False,
-                       fault_plan=None, latency=None):
+                       fault_plan=None, latency=None,
+                       schedule: Optional[str] = None):
     """Host loop (the propagation phase). Returns (state, metrics dict).
 
     ``latency`` — a ``dist.latency.LatencyModel`` (or None to resolve one
@@ -706,6 +998,15 @@ def run_to_convergence(cfg: GraphConfig, *, graph: Optional[ShardedGraph] = None
     ring to drain (``totals["pending"] == 0``).  A ``fault_plan`` with
     slowdown fields composes: the injected delays/throttles override the
     model's for the slowdown window, without recompilation.
+
+    ``schedule`` — ``"sync"`` (default; the BSP-style global tick
+    barrier) or ``"async"`` (barrier-free: each shard consumes its
+    delay-ring arrivals and pushes new messages on its own seeded firing
+    steps, advancing a per-shard logical clock; throttle becomes a
+    progress rate instead of a budget divisor).  ``None`` resolves from
+    ``cfg.schedule``.  Async runs always cross the delay ring (even with
+    zero latency) and converge when EVERY shard's frontier is empty AND
+    its inbound ring rows are drained.
     """
     from repro.core import faults as faults_mod
     from repro.dist import latency as lat_mod
@@ -716,6 +1017,10 @@ def run_to_convergence(cfg: GraphConfig, *, graph: Optional[ShardedGraph] = None
     g = to_device_graph(graph)
     max_ticks = cfg.max_ticks if max_ticks is None else max_ticks
 
+    schedule = schedule or getattr(cfg, "schedule", "sync") or "sync"
+    if schedule not in ("sync", "async"):
+        raise ValueError(f"unknown schedule {schedule!r}; "
+                         f"valid: 'sync', 'async'")
     if latency is None and cfg.latency_profile != "none":
         latency = lat_mod.from_config(cfg)
     injected = faults_mod.max_injected_delay(fault_plan)
@@ -725,7 +1030,143 @@ def run_to_convergence(cfg: GraphConfig, *, graph: Optional[ShardedGraph] = None
 
     log = []
     totals = {"ticks": 0, "sent": 0, "accepted": 0, "fetched": 0,
-              "replayed": 0, "failures": 0, "pending": 0}
+              "replayed": 0, "failures": 0, "pending": 0,
+              "schedule": schedule}
+
+    if schedule == "async":
+        P_ = graph.num_shards
+        base_delays = (latency.delays if latency
+                       else np.zeros((P_, P_), np.int32))
+        base_throttle = (latency.throttle if latency
+                         else np.ones((P_,), np.int32))
+        inter = lat_mod.make_interleaving(
+            P_, rates=base_throttle, seed=getattr(cfg, "async_seed", 0),
+            jitter=getattr(cfg, "async_jitter", False))
+        plan_rate = (fault_plan.slow_intensity
+                     if faults_mod.injects_slowdown(fault_plan) else 1)
+        max_stall = inter.stall_bound(plan_rate)
+        ring_delay = async_ring_delay(max_delay, max_stall)
+        # cycle-scaled resources: one firing of a rate-k shard stands in
+        # for k barrier steps, so it must carry k steps' worth of edge
+        # streaming and routing room.  Compile the widened window / caps
+        # once (max rate across the profile and any injected slowdown)
+        # and pass the LIVE per-shard window each step; a healthy run has
+        # r_all == 1 and keeps the exact sync-shaped params, preserving
+        # bit-identity with the barrier schedule.
+        r_all = max(int(np.asarray(base_throttle).max(initial=1)),
+                    plan_rate, 1)
+        ep_async = (dataclasses.replace(
+            ep, degree_window=ep.degree_window * r_all,
+            route_capacity=ep.route_capacity * r_all)
+            if r_all > 1 else ep)
+        D_base = ep.degree_window
+        # replay recovery must reach back past the checkpoint by the
+        # maximum link delay AND the staleness bound: a pre-checkpoint
+        # send can sit due-but-unconsumed until its receiver fires
+        fault_mgr = faults_mod.FaultManager(
+            cfg, graph, prog, ep_async,
+            replay_slack=max_delay + max_stall) \
+            if fault_plan is not None else None
+        tick_fn = make_async_tick(prog, ep_async, prog.weighted)
+        astate = init_async_state(prog, ep_async, graph, ring_delay)
+        ring_ckpt = None  # (ring, demote, tick, clock) at last snapshot
+        pending = 0
+        n_active = int(jnp.sum(astate.core.active))
+        shard_busy = np.asarray(jnp.sum(astate.core.active, axis=1))
+        for t in range(max_ticks):
+            # key the interleaving (and the emulated slowdown windows) on
+            # the DEVICE tick, not the host step: a checkpoint restore
+            # rewinds core.tick, and the ring-sizing guarantee (every due
+            # row is consumed within max_stall steps of its slot being
+            # reused) only holds if the firing pattern is a pure function
+            # of device time — keyed on the host step, the pattern would
+            # shift across a restore and a due-but-unconsumed row could
+            # be overwritten, silently dropping in-flight messages
+            dev_tick = int(astate.core.tick)
+            delays, throttle = faults_mod.apply_slowdown(
+                fault_plan, dev_tick, base_delays, base_throttle)
+            fire = inter.fire_mask(dev_tick, rates=throttle)
+            window = jnp.asarray(
+                np.minimum(np.asarray(throttle, np.int64), r_all)
+                * D_base, jnp.int32)
+            astate, astats, send_bufs = tick_fn(
+                astate, g,
+                jnp.asarray(np.minimum(delays, max_delay), jnp.int32),
+                jnp.asarray(fire), window)
+            stats = astats.base
+            n_active = int(stats.active)
+            pending = int(astats.pending)
+            shard_busy = (np.asarray(astats.shard_active)
+                          + np.asarray(astats.shard_pending))
+            totals["ticks"] += 1
+            totals["sent"] += int(stats.sent)
+            totals["accepted"] += int(stats.accepted)
+            totals["fetched"] += int(stats.fetched)
+            if fault_mgr is not None:
+                fault_mgr.record(t, astate.core, send_bufs,
+                                 clock=astate.clock)
+                if (fault_mgr.recovery == "checkpoint"
+                        and t % fault_mgr.ckpt_every == 0):
+                    # the consistent cut under per-shard clocks is no
+                    # longer "same logical tick everywhere" — it is the
+                    # snapshot instant's (state, ring, wall-clock step,
+                    # clock VECTOR): the ring carries every in-flight
+                    # message and the clock vector records how far each
+                    # shard had advanced
+                    ring_ckpt = (astate.ring, astate.demote,
+                                 astate.core.tick, astate.clock)
+                core, extra = fault_mgr.maybe_fail(
+                    t, astate.core, fault_plan, clock=astate.clock)
+                astate = astate._replace(core=core)
+                if extra.get("clock") is not None:
+                    astate = astate._replace(clock=extra["clock"])
+                if (extra.get("failures")
+                        and fault_mgr.recovery == "checkpoint"):
+                    if ring_ckpt is not None:
+                        ring, demote, snap_tick, snap_clock = ring_ckpt
+                        astate = AsyncState(core._replace(tick=snap_tick),
+                                            ring, demote, snap_clock)
+                    else:  # no snapshot yet -> run re-inits: empty ring
+                        astate = init_async_state(
+                            prog, ep_async, graph, ring_delay)._replace(
+                            core=core._replace(
+                                tick=jnp.zeros((), jnp.int32)))
+                    pending = int(jnp.sum(
+                        (astate.ring.ids >= 0)
+                        & (astate.ring.due >= 0)[..., None]))
+                totals["replayed"] += extra.get("replayed", 0)
+                totals["failures"] += extra.get("failures", 0)
+                if extra.get("failures"):
+                    n_active = int(jnp.sum(astate.core.active))
+                    shard_busy = (
+                        np.asarray(jnp.sum(astate.core.active, axis=1))
+                        + np.asarray(jnp.sum(
+                            (astate.ring.ids >= 0)
+                            & (astate.ring.due >= 0)[..., None],
+                            axis=(0, 1, 3))))
+            if collect_log:
+                log.append({
+                    "tick": t, "active": n_active,
+                    "sent": int(stats.sent),
+                    "accepted": int(stats.accepted),
+                    "fetched": int(stats.fetched), "pending": pending,
+                    "fired": np.asarray(fire).astype(int).tolist(),
+                    "clock": np.asarray(astate.clock).tolist(),
+                    "shard_active": np.asarray(
+                        astats.shard_active).tolist(),
+                    "shard_pending": np.asarray(
+                        astats.shard_pending).tolist()})
+            # per-shard convergence: EVERY shard must have an empty
+            # frontier AND a drained inbound ring (a global barrier-free
+            # run has no "same tick everywhere" instant to test at)
+            if int(shard_busy.max(initial=0)) == 0:
+                break
+        totals["pending"] = pending
+        totals["converged"] = int(shard_busy.max(initial=0)) == 0
+        totals["clock"] = np.asarray(astate.clock).tolist()
+        totals["log"] = log
+        return astate.core, totals
+
     # replay recovery must reach back past the checkpoint by the maximum
     # link delay: deferred messages straddling the snapshot are otherwise
     # in neither the restored state nor the replayed range
@@ -861,7 +1302,6 @@ def lower_tick_for_mesh(cfg: GraphConfig, mesh_2d, n_workers: int):
     # SUM/idempotence wire gating
     ep = derive_params(cfg, num_shards=n_workers, vs=vs, es=es,
                        num_vertices=cfg.num_vertices, prog=prog)
-    tick_fn = make_dist_tick(prog, ep, mesh, prog.weighted)
 
     sh = lambda spec: NamedSharding(mesh, spec)
     Pw = P("workers")
@@ -880,10 +1320,58 @@ def lower_tick_for_mesh(cfg: GraphConfig, mesh_2d, n_workers: int):
         jax.ShapeDtypeStruct((n_workers, es), jnp.float32, sharding=sh(Pw))
         if prog.weighted else None,
     )
-    compiled = jax.jit(tick_fn, donate_argnums=(0,)).lower(state, g).compile()
     codec = wire_codec(prog, ep)
     info = {"workers": n_workers, "vs": vs, "es": es,
             "M": ep.max_vertices_per_tick, "D": ep.degree_window,
             "cap": ep.route_capacity, "wire": codec.compression,
-            "wire_bytes_per_tick": codec.wire_bytes_per_tick()}
+            "wire_bytes_per_tick": codec.wire_bytes_per_tick(),
+            "schedule": cfg.schedule}
+    if cfg.schedule == "async":
+        # the async tick carries a different state pytree (ring + demote
+        # + clock vector) and two extra replicated inputs — lower exactly
+        # what a production async run would compile
+        from repro.dist import latency as lat_mod
+        lat = (lat_mod.from_config(cfg)
+               if cfg.latency_profile != "none" else None)
+        inter = lat_mod.make_interleaving(
+            n_workers,
+            rates=lat.throttle if lat else None,
+            seed=cfg.async_seed, jitter=cfg.async_jitter)
+        ring_delay = async_ring_delay(lat.max_delay if lat else 0,
+                                      inter.stall_bound())
+        # cycle-scaled resources, as run_to_convergence compiles them: a
+        # rate-k firing carries k steps' worth of window and routing room
+        r_all = int(inter.rates.max(initial=1))
+        ep = (dataclasses.replace(
+            ep, degree_window=ep.degree_window * r_all,
+            route_capacity=ep.route_capacity * r_all)
+            if r_all > 1 else ep)
+        info["D"], info["cap"] = ep.degree_window, ep.route_capacity
+        L1, cap = ring_delay + 1, ep.route_capacity
+        astate = AsyncState(
+            state,
+            ex_mod.DelayRing(
+                jax.ShapeDtypeStruct((n_workers, L1, n_workers, cap),
+                                     prog.jdtype, sharding=sh(Pw)),
+                jax.ShapeDtypeStruct((n_workers, L1, n_workers, cap),
+                                     jnp.int32, sharding=sh(Pw)),
+                jax.ShapeDtypeStruct((n_workers, L1, n_workers),
+                                     jnp.int32, sharding=sh(Pw))),
+            jax.ShapeDtypeStruct((n_workers, vs), jnp.bool_,
+                                 sharding=sh(Pw)),
+            jax.ShapeDtypeStruct((n_workers,), jnp.int32,
+                                 sharding=sh(P())))
+        delays = jax.ShapeDtypeStruct((n_workers, n_workers), jnp.int32,
+                                      sharding=sh(P()))
+        fire = jax.ShapeDtypeStruct((n_workers,), jnp.bool_,
+                                    sharding=sh(P()))
+        window = jax.ShapeDtypeStruct((n_workers,), jnp.int32,
+                                      sharding=sh(P()))
+        tick_fn = make_async_dist_tick(prog, ep, mesh, prog.weighted)
+        compiled = jax.jit(tick_fn, donate_argnums=(0,)).lower(
+            astate, g, delays, fire, window).compile()
+        info["ring_slots"] = L1
+        return compiled, info
+    tick_fn = make_dist_tick(prog, ep, mesh, prog.weighted)
+    compiled = jax.jit(tick_fn, donate_argnums=(0,)).lower(state, g).compile()
     return compiled, info

@@ -158,27 +158,39 @@ class FaultManager:
         # be delivered AFTER it (deferred delivery), so it is in neither
         # the snapshot nor the naive since+1..t replay range — widen the
         # replayed window by the maximum link delay (duplicates are safe
-        # by idempotence; zero for immediate-delivery runs)
+        # by idempotence; zero for immediate-delivery runs).  Async runs
+        # widen further, by the interleaving's stall bound: a due message
+        # is only consumed when its receiver fires
         self.replay_slack = replay_slack
         # per-shard checkpoint: tick -> (values, active, cursor, aux) rows
         # (aux = the push-mode sidecar planes, None for idempotent programs)
         self.ckpt_tick = np.full(graph.num_shards, -1, np.int64)
         self.ckpt: dict[int, tuple] = {}
+        # async mode: per-shard LOGICAL clock at the snapshot.  The
+        # consistent cut under per-shard progress is a vector, not a
+        # scalar — "same tick everywhere" no longer exists, so recovery
+        # restores each shard to its own recorded clock entry (replay) or
+        # the whole vector (global checkpoint restore)
+        self.ckpt_clock: dict[int, int] = {}
         # ring log of outgoing buffers: tick -> (send_vals, send_ids) numpy
         self.msg_log: dict[int, tuple] = {}
         self._schedule: Optional[dict[int, list[int]]] = None
 
     # ------------------------------------------------------------------
-    def record(self, t: int, state: EngineState, send_bufs) -> None:
+    def record(self, t: int, state: EngineState, send_bufs,
+               clock=None) -> None:
         if t % self.ckpt_every == 0:
             vals = np.asarray(state.values)
             act = np.asarray(state.active)
             cur = np.asarray(state.cursor)
             aux = (np.asarray(state.aux) if state.aux is not None else None)
+            cl = np.asarray(clock) if clock is not None else None
             for p in range(self.graph.num_shards):
                 self.ckpt[p] = (vals[p].copy(), act[p].copy(), cur[p].copy(),
                                 aux[p].copy() if aux is not None else None)
                 self.ckpt_tick[p] = t
+                if cl is not None:
+                    self.ckpt_clock[p] = int(cl[p])
         if self.recovery == "replay":  # checkpoint mode never reads the log
             sv, si = send_bufs
             self.msg_log[t] = (np.asarray(sv), np.asarray(si))
@@ -189,15 +201,30 @@ class FaultManager:
                     del self.msg_log[old]
 
     # ------------------------------------------------------------------
-    def maybe_fail(self, t: int, state: EngineState, plan: FaultPlan):
+    def maybe_fail(self, t: int, state: EngineState, plan: FaultPlan,
+                   clock=None):
+        """``clock`` (async runs): the current per-shard logical clock
+        vector.  When given, ``extra["clock"]`` carries the post-recovery
+        vector — a replayed shard rolls back to ITS recorded clock entry
+        (the other shards keep theirs: the cut is a vector), a global
+        checkpoint restore rolls the whole vector back to the snapshot's."""
         if self._schedule is None:
             self._schedule = plan.schedule(self.graph.num_shards)
         shards = self._schedule.get(t, [])
         extra = {"failures": 0, "replayed": 0}
+        new_clock = None if clock is None else np.asarray(clock).copy()
         for p in shards:
             state, replayed = self.fail_shard(t, state, p)
             extra["failures"] += 1
             extra["replayed"] += replayed
+            if new_clock is not None:
+                if self.recovery == "checkpoint":
+                    for q in range(self.graph.num_shards):
+                        new_clock[q] = self.ckpt_clock.get(q, 0)
+                else:
+                    new_clock[p] = self.ckpt_clock.get(p, 0)
+        if new_clock is not None and extra["failures"]:
+            extra["clock"] = jnp.asarray(new_clock, jnp.int32)
         return state, extra
 
     def fail_shard(self, t: int, state: EngineState, p: int

@@ -244,9 +244,19 @@ def init_delay_ring(max_delay: int, num_senders: int, num_shards: int,
 
 
 def _ring_push_pop(ring: DelayRing, send_vals, send_ids, tick, delays,
-                   identity):
+                   identity, recv_gate=None):
     """Shared ring mechanics: park this tick's sends, surface every row
     whose due tick has arrived (masked to empty otherwise), retire it.
+
+    ``recv_gate`` (optional, ``[Pn]`` bool) keys the pop on per-shard
+    clocks — the async scheduler's contract: a due row is only surfaced
+    (and retired) on a step its *receiver* fires, otherwise it stays
+    parked.  The ring must then be sized ``max_delay + max_stall`` slots
+    (not the synchronous ``max_delay + 1``): a due message can wait up
+    to ``max_stall - 1`` extra steps for its receiver, and its slot must
+    not be reused before it is consumed.  ``due`` broadcasts against a
+    trailing receiver axis in both ring layouts (local ``[L, P, Pn]``,
+    dist ``[L, Pn]``), so one gate expression serves both transports.
 
     Returns ``(deliver_vals, deliver_ids, ring', pending)`` where the
     deliverables keep the full ring extent (leading ``ring_len`` axis) —
@@ -258,6 +268,8 @@ def _ring_push_pop(ring: DelayRing, send_vals, send_ids, tick, delays,
     ids = ring.ids.at[slot].set(send_ids)
     due = ring.due.at[slot].set(tick + jnp.minimum(delays, L1 - 1))
     ready = (due >= 0) & (due <= tick)
+    if recv_gate is not None:
+        ready = ready & recv_gate  # [Pn] broadcasts onto the receiver axis
     dv = jnp.where(ready[..., None], vals, jnp.asarray(identity, vals.dtype))
     di = jnp.where(ready[..., None], ids, -1)
     due = jnp.where(ready, -1, due)
@@ -267,7 +279,7 @@ def _ring_push_pop(ring: DelayRing, send_vals, send_ids, tick, delays,
 
 def exchange_local_delayed(codec: WireCodec, ring: DelayRing,
                            send_vals: jnp.ndarray, send_ids: jnp.ndarray,
-                           tick, delays, identity
+                           tick, delays, identity, recv_gate=None
                            ) -> Tuple[jnp.ndarray, jnp.ndarray, DelayRing,
                                       jnp.ndarray]:
     """Deferred-delivery local transport.
@@ -278,10 +290,12 @@ def exchange_local_delayed(codec: WireCodec, ring: DelayRing,
     row ``l * P + p`` is sender ``p``'s buffer from ring slot ``l`` (empty
     rows carry ids of -1).  ``delays [P, Pn]`` may change tick to tick
     (fault-injected slowdowns); values above the ring's capacity clamp.
+    ``recv_gate [Pn]`` (async mode) keys delivery on the receivers'
+    firing steps — see :func:`_ring_push_pop`.
     Returns ``(recv_vals, recv_ids, ring', pending)`` with ``pending`` =
     messages still in flight after this delivery."""
     dv, di, ring, pending = _ring_push_pop(ring, send_vals, send_ids, tick,
-                                           delays, identity)
+                                           delays, identity, recv_gate)
     L1, P_ = dv.shape[0], dv.shape[1]
     rv, ri = exchange_local(codec, dv.reshape((L1 * P_,) + dv.shape[2:]),
                             di.reshape((L1 * P_,) + di.shape[2:]))
@@ -290,7 +304,8 @@ def exchange_local_delayed(codec: WireCodec, ring: DelayRing,
 
 def exchange_dist_delayed(codec: WireCodec, ring: DelayRing,
                           send_vals: jnp.ndarray, send_ids: jnp.ndarray,
-                          tick, delays_row, axis_name: str, identity
+                          tick, delays_row, axis_name: str, identity,
+                          recv_gate=None
                           ) -> Tuple[jnp.ndarray, jnp.ndarray, DelayRing,
                                      jnp.ndarray]:
     """Deferred-delivery dist transport (sender-side ring, must run inside
@@ -301,9 +316,11 @@ def exchange_dist_delayed(codec: WireCodec, ring: DelayRing,
     ``all_to_all`` each tick, so receive shapes stay static: the result is
     ``[ring_len * Pn, cap]`` with row ``l * Pn + q`` = sender ``q``'s ring
     slot ``l`` — the same row order (and the same codec arithmetic, hence
-    bit-identical delivery) as :func:`exchange_local_delayed`."""
+    bit-identical delivery) as :func:`exchange_local_delayed`.
+    ``recv_gate [Pn]`` rides replicated (every sender needs the full
+    firing vector to gate its per-receiver rows)."""
     dv, di, ring, pending = _ring_push_pop(ring, send_vals, send_ids, tick,
-                                           delays_row, identity)
+                                           delays_row, identity, recv_gate)
     a2a = lambda x: jax.lax.all_to_all(x, axis_name, 1, 1, tiled=True)
     enc_v, scales = codec.encode(dv)
     rv = a2a(enc_v)

@@ -11,8 +11,11 @@ Two restore paths (DESIGN.md C3):
     the frontier is preserved bit-for-bit).
 
 Because the engine is self-stabilizing, a resize mid-run is just a restore:
-boundary re-activation (faults.py fallback) covers any in-flight messages
-lost at the resize point.
+boundary re-activation covers any in-flight messages lost at the resize
+point.  Only *cut-crossing* vertices (an edge into another OLD shard —
+``old_graph.boundary``) can have a message in flight, so only those are
+re-activated; re-activating the whole graph (the old fallback) is a full
+re-propagation that wipes out the elasticity win.
 """
 from __future__ import annotations
 
@@ -59,9 +62,19 @@ def repartition_state(state: EngineState, old_graph, new_graph) -> EngineState:
         aux = jnp.stack([resplit(host_aux[:, ch], 0)
                          for ch in range(host_aux.shape[1])], axis=1)
 
+    # re-activate ONLY the cut-crossing vertices of the old partition:
+    # an in-flight message lost at the resize instant was necessarily
+    # sent by a vertex with an edge into another old shard, and the
+    # cursor reset makes a re-activated sender re-stream (re-deliver)
+    # all of its edges.  Vertices interior to their old shard cannot
+    # have in-flight messages and keep their frontier bit verbatim.
+    cut = np.asarray(old_graph.boundary).copy()  # [P, P, vs]
+    cut[np.arange(old_p.num_shards), np.arange(old_p.num_shards), :] = False
+    cut_v = resplit(cut.any(axis=1), False)
+
     return EngineState(
         values=resplit(state.values, np.asarray(state.values).max()),
-        active=resplit(state.active, False),
+        active=resplit(state.active, False) | cut_v,
         cursor=resplit(state.cursor, 0) * 0,  # cursors are CSR-relative
         tick=state.tick,
         aux=aux,

@@ -52,6 +52,11 @@ def main() -> None:
                     help="extra wire ticks on a crowded shard's links")
     ap.add_argument("--intensity", type=int, default=None,
                     help="work-budget divisor for crowded shards")
+    ap.add_argument("--schedule", default=None, choices=("sync", "async"),
+                    help="sync = BSP tick barrier; async = barrier-free "
+                         "per-shard progress (seeded interleaving)")
+    ap.add_argument("--async-seed", type=int, default=None,
+                    help="seed for the async interleaving (determinism)")
     ap.add_argument("--reduced", action="store_true",
                     help="run the config's tiny .reduced() variant "
                          "(CI smoke)")
@@ -80,6 +85,10 @@ def main() -> None:
         kw["link_delay"] = args.link_delay
     if args.intensity is not None:
         kw["slow_intensity"] = args.intensity
+    if args.schedule is not None:
+        kw["schedule"] = args.schedule
+    if args.async_seed is not None:
+        kw["async_seed"] = args.async_seed
     if kw:
         cfg = dataclasses.replace(cfg, **kw)
     if args.reduced:
@@ -93,7 +102,8 @@ def main() -> None:
           f"({prog.aggregator.name}-aggregation"
           f"{', weighted' if prog.weighted else ''}) "
           f"V={cfg.num_vertices} E~{cfg.num_edges} shards={cfg.num_shards} "
-          f"priority={cfg.priority}@{cfg.enforce_fraction}")
+          f"priority={cfg.priority}@{cfg.enforce_fraction} "
+          f"schedule={cfg.schedule}")
     t0 = time.time()
     graph = G.build_sharded_graph(cfg)
     print(f"[graph_mine] built CSR in {time.time() - t0:.1f}s "

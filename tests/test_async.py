@@ -1,0 +1,281 @@
+"""Asynchronous execution mode (barrier-free per-shard progress).
+
+The async schedule drops the global tick barrier: each shard consumes its
+delay-ring arrivals and pushes new messages on its own seeded firing steps
+(``dist.latency.AsyncInterleaving``), advancing a per-shard logical clock.
+The contract under test:
+
+  * the interleaving is deterministic and replayable (CI can assert
+    bit-identical runs),
+  * idempotent programs reach the SAME fixpoint as the synchronous
+    schedule, bit-for-bit, under every latency profile,
+  * the non-idempotent pagerank push program stays inside the push_eps
+    error ball,
+  * async composes with kill/replay and checkpoint-restore recovery
+    (consistent cuts over the clock VECTOR, not a scalar tick),
+  * the shard_map transport matches the local transport bit-for-bit.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.configs.base import GraphConfig
+from repro.core import engine as E
+from repro.core import graph as G
+from repro.core import merger
+from repro.core import programs as PR
+from repro.core.faults import FaultPlan
+from repro.dist import latency as lat_mod
+
+from conftest import csr_edges
+
+
+def _cfg(algorithm="cc", **overrides):
+    base = dict(name="t", algorithm=algorithm, num_vertices=256,
+                avg_degree=4, generator="rmat", num_shards=4,
+                enforce_fraction=0.5)
+    base.update(overrides)
+    return GraphConfig(**base)
+
+
+def _run(cfg, graph, prog, **kw):
+    state, totals = E.run_to_convergence(cfg, graph=graph, prog=prog, **kw)
+    return merger.extract(state, graph, prog), totals
+
+
+# ======================================================================
+class TestInterleaving:
+    def test_seeded_and_replayable(self):
+        a = lat_mod.make_interleaving(8, rates=[1, 2, 3, 4] * 2, seed=7)
+        b = lat_mod.make_interleaving(8, rates=[1, 2, 3, 4] * 2, seed=7)
+        np.testing.assert_array_equal(a.phases, b.phases)
+        for t in (0, 1, 5, 100):
+            np.testing.assert_array_equal(a.fire_mask(t), b.fire_mask(t))
+        c = lat_mod.make_interleaving(64, rates=[5] * 64, seed=8)
+        d = lat_mod.make_interleaving(64, rates=[5] * 64, seed=9)
+        assert (np.asarray(c.phases) != np.asarray(d.phases)).any()
+
+    def test_phase_below_rate_and_rate_respected(self):
+        inter = lat_mod.make_interleaving(6, rates=[1, 2, 3, 4, 5, 6],
+                                          seed=3)
+        assert (inter.phases < inter.rates).all()
+        fires = np.stack([inter.fire_mask(t) for t in range(60)])
+        # a rate-k shard fires exactly every k steps
+        np.testing.assert_array_equal(fires.sum(axis=0),
+                                      60 // np.asarray(inter.rates))
+
+    def test_jitter_never_skips_twice_and_widens_stall_bound(self):
+        inter = lat_mod.make_interleaving(16, seed=5, jitter=True)
+        fires = np.stack([inter.fire_mask(t) for t in range(200)])
+        assert (fires[:-1] | fires[1:]).all()  # no two consecutive skips
+        assert fires.sum() < fires.size  # ... but some skips do happen
+        assert inter.stall_bound() >= 2
+        no_jit = lat_mod.make_interleaving(16, seed=5)
+        assert no_jit.stall_bound() == 1
+        assert no_jit.stall_bound(extra_rate=4) == 4
+
+    def test_ring_sizing_covers_the_stall(self):
+        # the staleness fix: async rings need max_delay + max_stall slots
+        assert E.async_ring_delay(3, 1) == 3  # rate-1 == the sync rule
+        assert E.async_ring_delay(3, 4) == 6
+        assert E.async_ring_delay(0, 2) == 1
+
+
+# ======================================================================
+class TestAsyncFixpoint:
+    @pytest.mark.parametrize("algorithm", ["cc", "sssp", "widest_path"])
+    @pytest.mark.parametrize("profile", ["none", "stragglers",
+                                         "heavy_tail"])
+    def test_idempotent_bit_identical_across_profiles(self, algorithm,
+                                                      profile):
+        """Reordering invariance (§3.3) survives the barrier drop: an
+        idempotent program's async fixpoint equals the synchronous one
+        bit-for-bit under every latency profile."""
+        weighted = PR.get_program(_cfg(algorithm)).weighted
+        cfg = _cfg(algorithm, weighted=weighted)
+        g = G.build_sharded_graph(cfg)
+        prog = PR.get_program(cfg)
+        ref, _ = _run(cfg, g, prog)
+        acfg = dataclasses.replace(cfg, schedule="async",
+                                   latency_profile=profile, latency_seed=1)
+        out, totals = _run(acfg, g, prog)
+        assert totals["converged"] and totals["pending"] == 0
+        np.testing.assert_array_equal(out, ref)
+
+    def test_healthy_async_is_bitwise_bsp(self):
+        """With every rate at 1 and no jitter the interleaving is the
+        full barrier — async must reproduce the sync run exactly."""
+        cfg = _cfg("cc")
+        g = G.build_sharded_graph(cfg)
+        prog = PR.get_program(cfg)
+        ref, rt = _run(cfg, g, prog)
+        out, at = _run(dataclasses.replace(cfg, schedule="async"), g, prog)
+        np.testing.assert_array_equal(out, ref)
+        assert at["clock"] == [at["ticks"]] * cfg.num_shards
+
+    def test_clock_vector_tracks_firing_rates(self):
+        """Crowded shards fire (and advance their logical clock) at
+        1/intensity the rate of healthy shards."""
+        cfg = _cfg("cc", schedule="async", latency_profile="stragglers",
+                   latency_seed=1, slow_intensity=3)
+        g = G.build_sharded_graph(cfg)
+        prog = PR.get_program(cfg)
+        lat = lat_mod.from_config(cfg)
+        _, totals = _run(cfg, g, prog)
+        clock = np.asarray(totals["clock"])
+        rates = np.asarray(lat.throttle)
+        assert (clock[rates == 1] == totals["ticks"]).all()
+        slow = clock[rates > 1]
+        assert (slow <= -(-totals["ticks"] // 3) + 1).all()
+
+    def test_pagerank_stays_in_push_eps_ball(self):
+        cfg = _cfg("pagerank", num_vertices=128, enforce_fraction=1.0)
+        g = G.build_sharded_graph(cfg)
+        prog = PR.get_program(cfg)
+        ref, _ = _run(cfg, g, prog)
+        acfg = dataclasses.replace(cfg, schedule="async",
+                                   latency_profile="stragglers",
+                                   latency_seed=1, slow_intensity=2)
+        out, totals = _run(acfg, g, prog)
+        assert totals["converged"]
+        ball = 2 * prog.push_eps / (1 - cfg.damping)
+        assert np.abs(out.astype(np.float64)
+                      - ref.astype(np.float64)).max() <= ball
+
+
+# ======================================================================
+class TestAsyncDeterminism:
+    def test_same_seed_same_run(self):
+        cfg = _cfg("cc", schedule="async", latency_profile="stragglers",
+                   latency_seed=1, async_jitter=True, async_seed=3)
+        g = G.build_sharded_graph(cfg)
+        prog = PR.get_program(cfg)
+        out1, t1 = _run(cfg, g, prog)
+        out2, t2 = _run(cfg, g, prog)
+        np.testing.assert_array_equal(out1, out2)
+        assert t1["ticks"] == t2["ticks"]
+        assert t1["clock"] == t2["clock"]
+        assert t1["sent"] == t2["sent"]
+
+    def test_different_seed_same_fixpoint(self):
+        cfg = _cfg("cc", schedule="async", async_jitter=True)
+        g = G.build_sharded_graph(cfg)
+        prog = PR.get_program(cfg)
+        oracle = G.cc_oracle(g.num_real_vertices, csr_edges(g))
+        outs = []
+        for seed in (0, 11):
+            out, totals = _run(dataclasses.replace(cfg, async_seed=seed),
+                               g, prog)
+            assert totals["converged"]
+            outs.append(out)
+        np.testing.assert_array_equal(outs[0], oracle)
+        np.testing.assert_array_equal(outs[1], oracle)
+
+
+# ======================================================================
+class TestAsyncFaults:
+    def test_kill_replay_composition(self):
+        """Async + kill/replay: replay slack is widened by the stall
+        bound (a pre-checkpoint send can sit due-but-unconsumed until
+        its receiver fires) and the fixpoint is exact."""
+        cfg = _cfg("cc", num_vertices=512, avg_degree=6,
+                   schedule="async", latency_profile="stragglers",
+                   latency_seed=1, checkpoint_every=3, replay_log_ticks=16)
+        g = G.build_sharded_graph(cfg)
+        prog = PR.get_program(cfg)
+        oracle = G.cc_oracle(g.num_real_vertices, csr_edges(g))
+        plan = FaultPlan(fail_fraction=1.0, start_tick=4, every=6)
+        out, totals = _run(cfg, g, prog, fault_plan=plan)
+        assert totals["failures"] > 0 and totals["replayed"] > 0
+        assert totals["converged"]
+        np.testing.assert_array_equal(out, oracle)
+
+    def test_checkpoint_restore_composition_conserves_mass(self):
+        """Async + checkpoint-restore on the non-idempotent pagerank
+        program: the consistent cut is (state, ring, wall-clock tick,
+        clock VECTOR), and the post-restore era must replay the same
+        device-tick-keyed interleaving — in-flight mass survives and the
+        result stays inside the push_eps ball."""
+        cfg = _cfg("pagerank", num_vertices=128, enforce_fraction=1.0)
+        g = G.build_sharded_graph(cfg)
+        prog = PR.get_program(cfg)
+        ref, _ = _run(cfg, g, prog)
+        acfg = dataclasses.replace(cfg, schedule="async",
+                                   latency_profile="stragglers",
+                                   latency_seed=1, slow_intensity=2)
+        plan = FaultPlan(fail_fraction=0.5, start_tick=4, every=6)
+        state, totals = E.run_to_convergence(acfg, graph=g, prog=prog,
+                                             fault_plan=plan)
+        assert totals["failures"] > 0
+        assert totals["converged"]
+        assert abs(merger.mass_balance(state, g) - 1.0) < 1e-4
+        out = merger.extract(state, g, prog)
+        ball = 2 * prog.push_eps / (1 - cfg.damping)
+        assert np.abs(out.astype(np.float64)
+                      - ref.astype(np.float64)).max() <= ball
+
+
+# ======================================================================
+class TestAsyncDistTick:
+    def test_dist_matches_local_on_one_worker_mesh(self):
+        """The shard_map async tick (sender-side ring, recv-gated pop,
+        replicated fire vector) must track the local async tick
+        bit-for-bit — including steps where the shard does NOT fire and
+        its due ring rows stay parked."""
+        cfg = GraphConfig(name="t", algorithm="cc", num_vertices=128,
+                          avg_degree=4, generator="rmat", num_shards=1,
+                          enforce_fraction=1.0)
+        g = G.build_sharded_graph(cfg)
+        prog = PR.get_program(cfg)
+        ep = E.default_params(cfg, g, prog)
+        dg = E.to_device_graph(g)
+        mesh = Mesh(np.array(jax.devices()[:1]), ("workers",))
+        inter = lat_mod.make_interleaving(1, rates=[2], seed=4)
+        ring_delay = E.async_ring_delay(1, inter.stall_bound())
+        delays = jnp.asarray([[1]], jnp.int32)
+        # cycle-scaled params, exactly as run_to_convergence compiles
+        # them for a max rate of 2, with the live per-shard window
+        ep = dataclasses.replace(ep, degree_window=ep.degree_window * 2,
+                                 route_capacity=ep.route_capacity * 2)
+        window = jnp.asarray([ep.degree_window], jnp.int32)
+        tick_l = E.make_async_tick(prog, ep, prog.weighted)
+        as_l = E.init_async_state(prog, ep, g, ring_delay)
+        tick_d = E.make_async_dist_tick(prog, ep, mesh, prog.weighted)
+        as_d = E.init_async_dist_state(prog, ep, g, ring_delay)
+        done = False
+        for t in range(400):
+            fire = jnp.asarray(inter.fire_mask(t))
+            as_l, st_l, _ = tick_l(as_l, dg, delays, fire, window)
+            as_d, st_d = tick_d(as_d, dg, delays, fire, window)
+            np.testing.assert_array_equal(np.asarray(as_l.core.values),
+                                          np.asarray(as_d.core.values))
+            np.testing.assert_array_equal(np.asarray(as_l.core.active),
+                                          np.asarray(as_d.core.active))
+            np.testing.assert_array_equal(np.asarray(as_l.clock),
+                                          np.asarray(as_d.clock))
+            assert int(st_l.pending) == int(st_d.pending)
+            busy = (int(st_l.base.active)
+                    + int(np.asarray(st_l.shard_pending).sum()))
+            if busy == 0:
+                done = True
+                break
+        assert done
+        oracle = G.cc_oracle(g.num_real_vertices, csr_edges(g))
+        out = np.asarray(as_l.core.values).reshape(-1)[:g.num_real_vertices]
+        assert (out == oracle).all()
+
+    def test_async_dryrun_lowers(self):
+        """The dry-run generalizes to the async state pytree (ring +
+        demote + clock) without real allocation."""
+        cfg = _cfg("cc", num_shards=1, schedule="async",
+                   latency_profile="stragglers")
+        mesh2d = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                      ("a", "b"))
+        compiled, info = E.lower_tick_for_mesh(cfg, mesh2d, 1)
+        assert info["schedule"] == "async"
+        assert info["ring_slots"] >= 1
+        assert compiled is not None

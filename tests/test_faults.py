@@ -133,3 +133,51 @@ class TestBackpressure:
                 break
         out = merger.extract(state, g, prog)
         assert (out == oracle).all()
+
+    def test_starved_capacity_keeps_highest_priority_messages(self):
+        """Scheduling order under overflow: when route capacity cannot
+        hold every selected vertex's messages, the kept slots must go to
+        the BEST buckets first.  The two-tier selection rank is vertex-
+        index order within a tier, so without the bucket reorder the
+        kept prefix was the low-vertex-index work — here vertex 0 (a
+        worse frontier value) would starve vertex 2 (the best value)."""
+        from repro.core.engine import EngineParams, N_BUCKETS, \
+            _phase1_create, priority_buckets
+        prog = PR.get_program("bfs")
+        vs, M, D, cap = 8, 4, 2, 2
+        ep = EngineParams(num_shards=1, vs=vs, max_vertices_per_tick=M,
+                          degree_window=D, route_capacity=cap,
+                          enforce_fraction=1.0, priority="log",
+                          priority_scale=32.0)
+        # three active vertices in three distinct buckets; the best
+        # bucket belongs to the HIGHEST vertex index among the two that
+        # land in the sub-threshold tier
+        values = jnp.full((vs,), 2**30, jnp.int32)
+        values = values.at[0].set(8).at[2].set(1).at[3].set(30)
+        active = jnp.zeros((vs,), bool).at[jnp.asarray([0, 2, 3])].set(True)
+        b = np.asarray(priority_buckets(
+            prog.priority_value(values), "log", ep.priority_scale))
+        assert b[2] < b[0] < b[3] <= N_BUCKETS - 1  # test precondition
+        # adjacency: each active vertex has D=2 edges to distinct targets
+        indptr = np.zeros((vs + 1,), np.int64)
+        adj = {0: [4, 5], 2: [6, 7], 3: [1, 5]}
+        col = []
+        for v in range(vs):
+            indptr[v + 1] = indptr[v] + len(adj.get(v, []))
+            col += adj.get(v, [])
+        active_out, cursor, send_vals, send_ids, sent, fetched, _, _ = \
+            _phase1_create(prog, ep, values, active,
+                           jnp.zeros((vs,), jnp.int32),
+                           jnp.asarray(indptr, jnp.int32),
+                           jnp.asarray(col, jnp.int32), None,
+                           jnp.asarray(0, jnp.int32))
+        # capacity = 2 slots: they must hold vertex 2's messages (best
+        # bucket), not vertex 0's (lowest index)
+        kept = sorted(int(i) for i in np.asarray(send_ids[0]) if i >= 0)
+        assert kept == [6, 7]
+        assert int(sent) == 2
+        # the starved senders hold position and retry: still active with
+        # an unmoved cursor
+        a, c = np.asarray(active_out), np.asarray(cursor)
+        assert a[0] and a[3] and not a[2]
+        assert c[0] == 0 and c[3] == 0

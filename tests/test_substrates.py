@@ -343,15 +343,19 @@ class TestElastic:
         for _ in range(6):
             state, stats, _ = tick(state, dg)
         for new_shards in (4, 2):
-            import jax.numpy as jnp
             cfgN = dataclasses.replace(cfg8, num_shards=new_shards)
             gN = G.build_sharded_graph(cfgN)
             s = repartition_state(state, g8, gN)
-            # self-stabilizing safety: re-activate everything once (covers
-            # frontier misalignment from the resize)
-            gidsN = jnp.arange(gN.num_shards * gN.vs).reshape(gN.num_shards,
-                                                             gN.vs)
-            s = s._replace(active=gidsN < gN.num_real_vertices)
+            # regression: repartition re-activates only the old cut-
+            # crossing vertices (the only possible in-flight senders),
+            # not the whole graph
+            n_active = int(np.asarray(s.active).sum())
+            b = np.asarray(g8.boundary).copy()
+            b[np.arange(8), np.arange(8)] = False
+            n_cut = int(b.any(axis=1).sum())
+            n_old_active = int(np.asarray(state.active).sum())
+            assert n_active <= n_cut + n_old_active
+            assert n_active < gN.num_real_vertices
             epN = E.default_params(cfgN, gN)
             tickN = E.make_local_tick(prog, epN, prog.weighted)
             dgN = E.to_device_graph(gN)
