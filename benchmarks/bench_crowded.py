@@ -52,12 +52,14 @@ import dataclasses
 
 import numpy as np
 
-from benchmarks.common import emit, run_asymp
+from benchmarks.common import bench_cli, emit, run_asymp
 from repro.configs.base import GraphConfig
 from repro.core import graph as G
 from repro.core import merger
 from repro.core import programs as PR
 from repro.dist import latency as L
+
+AREA = "crowded"
 
 # the two scheduling policies under test (same budget, same latency)
 FIFO = dict(priority="disabled", straggler_demote=0)
@@ -143,7 +145,8 @@ def check_fixpoint_invariance(verbose: bool = True) -> None:
                 note = f"l1={l1:.2e}<bound={bound:.1e}"
             if verbose:
                 emit(f"crowded/fixpoint/{name}/{profile}",
-                     tot["wall_s"] * 1e6, f"ticks={tot['ticks']};{note}")
+                     tot["wall_s"] * 1e6, f"ticks={tot['ticks']};{note}",
+                     verdict="pass", config=cfg)
 
 
 def smoke() -> None:
@@ -158,14 +161,18 @@ def smoke() -> None:
     g = G.build_sharded_graph(cfg)
     prio = degradation(cfg, g)
     fifo = degradation(dataclasses.replace(cfg, **FIFO), g)
+    shape_ok = (prio["ratio"] < 2.0
+                and prio["crowded"]["ticks"] < fifo["crowded"]["ticks"]
+                and prio["crowded"]["sent"] < fifo["crowded"]["sent"])
     emit("smoke/crowded/priority", prio["crowded"]["wall_s"] * 1e6,
          f"ticks_healthy={prio['healthy']['ticks']};"
          f"ticks_crowded={prio['crowded']['ticks']};"
-         f"degradation_x={prio['ratio']:.2f}")
+         f"degradation_x={prio['ratio']:.2f}",
+         verdict="pass" if shape_ok else "fail", config=cfg)
     emit("smoke/crowded/fifo", fifo["crowded"]["wall_s"] * 1e6,
          f"ticks_healthy={fifo['healthy']['ticks']};"
          f"ticks_crowded={fifo['crowded']['ticks']};"
-         f"degradation_x={fifo['ratio']:.2f}")
+         f"degradation_x={fifo['ratio']:.2f}", config=cfg)
     assert prio["ratio"] < 2.0, \
         f"smoke: 50% slow shards degraded priority by {prio['ratio']:.2f}x"
     assert prio["crowded"]["ticks"] < fifo["crowded"]["ticks"], \
@@ -178,10 +185,14 @@ def smoke() -> None:
     # healthy shards keep firing every emulated step while crowded ones
     # burst cycle-scaled windows on their own clock
     asyn = degradation(dataclasses.replace(cfg, schedule="async"), g)
+    async_ok = (asyn["healthy"]["ticks"] == prio["healthy"]["ticks"]
+                and asyn["ratio"] <= prio["ratio"])
     emit("smoke/crowded/async", asyn["crowded"]["wall_s"] * 1e6,
          f"ticks_healthy={asyn['healthy']['ticks']};"
          f"ticks_crowded={asyn['crowded']['ticks']};"
-         f"degradation_x={asyn['ratio']:.2f}")
+         f"degradation_x={asyn['ratio']:.2f}",
+         verdict="pass" if async_ok else "fail",
+         config=dataclasses.replace(cfg, schedule="async"))
     assert asyn["healthy"]["ticks"] == prio["healthy"]["ticks"], \
         "smoke: async on a healthy cluster must match the BSP tick count"
     assert asyn["ratio"] <= prio["ratio"], \
@@ -201,7 +212,8 @@ def main() -> None:
 
     print("-- slowdown fraction x intensity sweep (priority scheduler) --")
     h = _run(cfg, g, **HEALTHY)
-    emit("crowded/healthy", h["wall_s"] * 1e6, f"ticks={h['ticks']}")
+    emit("crowded/healthy", h["wall_s"] * 1e6, f"ticks={h['ticks']}",
+         config=cfg)
     for frac in (0.25, 0.5, 0.75):
         for intensity in (2, 4, 8):
             c = _run(cfg, g, profile="stragglers", slow_fraction=frac,
@@ -242,8 +254,4 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    import sys
-    if "--smoke" in sys.argv:
-        smoke()
-    else:
-        main()
+    bench_cli(AREA, main, smoke)

@@ -2,9 +2,11 @@
 including the recovery spikes caused by injected failures."""
 from __future__ import annotations
 
-from benchmarks.common import emit, run_asymp
+from benchmarks.common import bench_cli, emit, run_asymp
 from repro.configs.base import GraphConfig
 from repro.core.faults import FaultPlan
+
+AREA = "evolution"
 
 
 def main() -> None:
@@ -26,10 +28,10 @@ def main() -> None:
                  f"seek={row['fetched']};sent={row['sent']};"
                  f"accepted={row['accepted']}")
     emit("fig10/summary", tot["wall_s"] * 1e6,
-         f"ticks={tot['ticks']};props_per_vertex="
-         f"{total_props / max(g.num_edges, 1):.2f}_edge_fetches_per_edge;"
-         f"failures={tot['failures']}")
+         f"ticks={tot['ticks']};"
+         f"edge_fetches_per_edge={total_props / max(g.num_edges, 1):.2f};"
+         f"failures={tot['failures']}", config=cfg)
 
 
 if __name__ == "__main__":
-    main()
+    bench_cli(AREA, main)

@@ -13,13 +13,15 @@ import dataclasses
 
 import numpy as np
 
-from benchmarks.common import emit, run_asymp
+from benchmarks.common import bench_cli, emit, run_asymp
 from repro.configs.base import GraphConfig
 from repro.core import engine as E
 from repro.core import graph as G
 from repro.core import merger
 from repro.core import programs as PR
 from repro.core.faults import FaultManager, FaultPlan
+
+AREA = "faults"
 
 
 def _pagerank_cfg(log2n: int) -> GraphConfig:
@@ -64,9 +66,12 @@ def smoke() -> None:
     plan = FaultPlan(fail_fraction=1.0, start_tick=4, every=5)
     _, _, tot = run_asymp(cfg, graph=g, fault_plan=plan)
     overhead = tot["ticks"] / base["ticks"]
+    ok = (tot["converged"] and tot["failures"] == cfg.num_shards
+          and tot["replayed"] > 0 and overhead < 3.0)
     emit("smoke/fig9a/fail100", tot["wall_s"] * 1e6,
          f"failures={tot['failures']};replayed={tot['replayed']};"
-         f"tick_overhead_x={overhead:.2f}")
+         f"tick_overhead_x={overhead:.2f}",
+         verdict="pass" if ok else "fail", config=cfg)
     assert tot["converged"] and tot["failures"] == cfg.num_shards
     assert tot["replayed"] > 0, "smoke: recovery never exercised replay"
     assert overhead < 3.0, f"smoke: failure overhead blew up ({overhead:.2f}x)"
@@ -84,9 +89,11 @@ def smoke() -> None:
     _, state, tot = run_asymp(cfg_pr, graph=g_pr, fault_plan=plan)
     overhead = tot["ticks"] / base_pr["ticks"]
     l1, mass = _pagerank_verdict(cfg_pr, g_pr, state, tot)
+    ok = tot["failures"] > 0 and tot["replayed"] == 0
     emit("smoke/fig9a/ckpt_restore_fail50", tot["wall_s"] * 1e6,
          f"failures={tot['failures']};replayed={tot['replayed']};"
-         f"tick_overhead_x={overhead:.2f};l1={l1:.2e};mass={mass:.8f}")
+         f"tick_overhead_x={overhead:.2f};l1={l1:.2e};mass={mass:.8f}",
+         verdict="pass" if ok else "fail", config=cfg_pr)
     assert tot["failures"] > 0, "smoke: checkpoint path never exercised"
     assert tot["replayed"] == 0, "smoke: non-idempotent program replayed"
     print(f"== smoke OK: pagerank checkpoint restore, "
@@ -103,7 +110,7 @@ def main() -> None:
     g = G.build_sharded_graph(cfg)
     _, _, base = run_asymp(cfg, graph=g)
     emit("fig9a/fail0", base["wall_s"] * 1e6,
-         f"ticks={base['ticks']};messages={base['sent']}")
+         f"ticks={base['ticks']};messages={base['sent']}", config=cfg)
     for frac in (0.5, 1.0, 2.0):
         plan = FaultPlan(fail_fraction=frac, start_tick=4, every=5)
         _, _, tot = run_asymp(cfg, graph=g, fault_plan=plan)
@@ -111,7 +118,8 @@ def main() -> None:
              f"ticks={tot['ticks']};"
              f"tick_overhead_x={tot['ticks'] / base['ticks']:.2f};"
              f"failures={tot['failures']};replayed={tot['replayed']};"
-             f"converged={tot['converged']}")
+             f"converged={tot['converged']}",
+             verdict="pass" if tot["converged"] else "fail", config=cfg)
 
     # straggler: one shard gets 1/8 of the edge budget (no barrier -> the
     # fleet keeps making progress; overhead stays bounded)
@@ -122,7 +130,7 @@ def main() -> None:
     _, _, tot = run_asymp(slow, graph=g)
     emit("fig9a/straggler_budget_div8", tot["wall_s"] * 1e6,
          f"ticks={tot['ticks']};tick_overhead_x="
-         f"{tot['ticks'] / base['ticks']:.2f}")
+         f"{tot['ticks'] / base['ticks']:.2f}", config=slow)
 
     # ---- §5.5 degradation on the checkpoint-restore path (pagerank) ----
     print("== Fig 9a (checkpoint-restore path): pagerank, rmat12, "
@@ -131,7 +139,8 @@ def main() -> None:
     g_pr = G.build_sharded_graph(cfg_pr)
     _, _, base_pr = run_asymp(cfg_pr, graph=g_pr)
     emit("fig9a/ckpt/fail0", base_pr["wall_s"] * 1e6,
-         f"ticks={base_pr['ticks']};messages={base_pr['sent']}")
+         f"ticks={base_pr['ticks']};messages={base_pr['sent']}",
+         config=cfg_pr)
     for frac in (0.5, 1.0, 2.0):
         plan = FaultPlan(fail_fraction=frac, start_tick=4, every=5)
         _, state, tot = run_asymp(cfg_pr, graph=g_pr, fault_plan=plan)
@@ -140,12 +149,9 @@ def main() -> None:
              f"ticks={tot['ticks']};"
              f"tick_overhead_x={tot['ticks'] / base_pr['ticks']:.2f};"
              f"failures={tot['failures']};replayed={tot['replayed']};"
-             f"l1={l1:.2e};mass={mass:.8f}")
+             f"l1={l1:.2e};mass={mass:.8f}",
+             verdict="pass" if tot["converged"] else "fail", config=cfg_pr)
 
 
 if __name__ == "__main__":
-    import sys
-    if "--smoke" in sys.argv:
-        smoke()
-    else:
-        main()
+    bench_cli(AREA, main, smoke)

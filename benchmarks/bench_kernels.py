@@ -5,9 +5,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, timed
+from benchmarks.common import bench_cli, emit, timed
 from repro.kernels import ref as R
 from repro.kernels.semiring_spmv import EDGE_BLOCK, spmv_partials
+
+AREA = "kernels"
 
 
 def main() -> None:
@@ -20,17 +22,17 @@ def main() -> None:
     for semiring in ("min", "min_plus", "plus_times"):
         f = jax.jit(lambda v, d, ww, s=semiring: spmv_partials(
             v, d, ww, semiring=s, interpret=True))
-        f(vals, dst, w).block_until_ready()  # compile
-        _, us = timed(lambda: f(vals, dst, w).block_until_ready(), repeats=3)
-        emit(f"kernels/spmv/{semiring}", us, f"edges={n};"
-             f"Medges_per_s={n / us:.2f}")
+        _, t = timed(lambda: f(vals, dst, w).block_until_ready(), repeats=3)
+        emit(f"kernels/spmv/{semiring}", t.steady_us,
+             f"edges={n};Medges_per_s={n / t.steady_us:.2f};"
+             f"compile_us={t.compile_us:.1f}")
         fr = jax.jit(lambda v, d, ww, s=semiring: R.spmv_partials_ref(
             v, d, ww, semiring=s))
-        fr(vals, dst, w).block_until_ready()
-        _, us_r = timed(lambda: fr(vals, dst, w).block_until_ready(),
-                        repeats=3)
-        emit(f"kernels/spmv_ref/{semiring}", us_r, "oracle")
+        _, tr = timed(lambda: fr(vals, dst, w).block_until_ready(),
+                      repeats=3)
+        emit(f"kernels/spmv_ref/{semiring}", tr.steady_us,
+             f"impl=reference;compile_us={tr.compile_us:.1f}")
 
 
 if __name__ == "__main__":
-    main()
+    bench_cli(AREA, main)

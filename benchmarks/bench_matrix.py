@@ -1,0 +1,358 @@
+"""Scenario matrix: {program} x {latency profile} x {fault plan} x
+{wire mode} x {schedule}, every cell's fixpoint verdict asserted.
+
+The paper's claims are *measured* claims, and each bench_* module
+measures one §5 axis at a time.  This driver sweeps the axes against
+each other — the combinations are where regressions hide (a wire codec
+that survives zero latency but drops a deferred row; an async schedule
+that is exact until a checkpoint restore rewinds it) — and emits every
+cell into ``BENCH_matrix.json`` for the trajectory gate
+(``tools/bench_diff.py``).
+
+Axes:
+
+  * program   — cc (min), sssp (min, float), pagerank (SUM, push-mode),
+                reachability (or) — one per aggregator family;
+  * latency   — none | stragglers | heavy_tail (``dist/latency.py``,
+                seeded; crowded shards get throttled budgets + link
+                delays through the deferred-delivery ring);
+  * fault     — none | kill (50% rolling failures: replay for idempotent
+                programs, globally consistent checkpoint restore for
+                SUM) | slow (mid-run slowdown window via FaultPlan);
+  * wire      — none | int16 | int8 (``dist/exchange.py`` codecs);
+  * schedule  — sync (BSP barrier) | async (barrier-free seeded
+                interleaving, per-shard clocks).
+
+Statically-invalid cells are *skipped with a machine-readable reason*,
+decided by the same gate production uses (``effective_compression``):
+lossy wire under pagerank's non-idempotent SUM is refused (quantization
+error compounds under (+)), and an int8 request whose labels exceed the
+sentinel bound degrades — a cell whose effective mode differs from its
+requested mode is not a valid scenario, it is a silently different one.
+
+Per-cell verdict (against the program's reference cell, itself validated
+against a host oracle):
+
+  * idempotent program, lossless wire  — bitwise-identical fixpoint;
+  * idempotent program, lossy float wire — directional: quantized sssp
+    distances never under-estimate (ceil grid), same reachable set;
+  * pagerank — normalized L1 within the push_eps error ball and
+    probability mass conserved (the exactly-once witness).
+
+    PYTHONPATH=src python -m benchmarks.bench_matrix --smoke  # CI gate
+    PYTHONPATH=src python -m benchmarks.bench_matrix          # full sweep
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Optional
+
+import numpy as np
+
+from benchmarks.common import bench_cli, csr_edges, emit, run_asymp
+from repro.configs.base import GraphConfig
+from repro.core import graph as G
+from repro.core import merger
+from repro.core import programs as PR
+from repro.core.faults import FaultPlan
+from repro.dist import exchange as ex_mod
+
+AREA = "matrix"
+PROGRAMS = ("cc", "sssp", "pagerank", "reachability")
+LATENCY = ("none", "stragglers", "heavy_tail")
+FAULT = ("none", "kill", "slow")
+WIRE = ("none", "int16", "int8")
+SCHEDULE = ("sync", "async")
+MIN_SMOKE_CELLS = 24  # acceptance floor for valid green cells in CI
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    program: str
+    latency: str
+    fault: str
+    wire: str
+    schedule: str
+
+    @property
+    def key(self) -> str:
+        return (f"{self.program}/{self.latency}/{self.fault}/"
+                f"{self.wire}/{self.schedule}")
+
+    @property
+    def is_base(self) -> bool:
+        return (self.latency, self.fault, self.wire, self.schedule) == \
+            ("none", "none", "none", "sync")
+
+
+def base_cell(program: str) -> Cell:
+    return Cell(program, "none", "none", "none", "sync")
+
+
+def all_cells() -> list[Cell]:
+    """The full cross product (full mode sweeps every valid cell)."""
+    return [Cell(*axes) for axes in
+            itertools.product(PROGRAMS, LATENCY, FAULT, WIRE, SCHEDULE)]
+
+
+def smoke_cells() -> list[Cell]:
+    """CI subset: per program, the base cell plus one cell per
+    non-default axis value (one-factor-at-a-time — every axis exercised
+    for every aggregator family without the full 216-cell sweep)."""
+    cells = []
+    for program in PROGRAMS:
+        base = base_cell(program)
+        cells.append(base)
+        for profile in LATENCY[1:]:
+            cells.append(dataclasses.replace(base, latency=profile))
+        for fault in FAULT[1:]:
+            cells.append(dataclasses.replace(base, fault=fault))
+        for wire in WIRE[1:]:
+            cells.append(dataclasses.replace(base, wire=wire))
+        cells.append(dataclasses.replace(base, schedule="async"))
+    return cells
+
+
+# ======================================================================
+# Cell -> run configuration
+# ======================================================================
+def program_cfg(program: str) -> GraphConfig:
+    """One small budget-bound graph per program (pagerank runs smaller:
+    residual push needs ~log(1/eps)/log(1/d) visits per vertex)."""
+    n = 256 if program == "pagerank" else 512
+    deg = 4 if program == "pagerank" else 5
+    return GraphConfig(
+        name=f"matrix-{program}", algorithm=program, num_vertices=n,
+        avg_degree=deg, generator="rmat", num_shards=4, priority="log",
+        enforce_fraction=0.5, weighted=program == "sssp",
+        checkpoint_every=4, replay_log_ticks=8)
+
+
+def cell_cfg(cell: Cell, cfg: GraphConfig) -> GraphConfig:
+    kw: dict = {"name": f"matrix-{cell.key}".replace("/", "-")}
+    if cell.latency != "none":
+        kw.update(latency_profile=cell.latency, slow_fraction=0.5,
+                  link_delay=2, slow_intensity=2, latency_seed=1)
+    if cell.wire != "none":
+        kw.update(wire_compression=cell.wire)
+    if cell.schedule == "async":
+        kw.update(schedule="async")
+    return dataclasses.replace(cfg, **kw)
+
+
+def cell_fault_plan(cell: Cell) -> Optional[FaultPlan]:
+    if cell.fault == "kill":
+        return FaultPlan(fail_fraction=0.5, start_tick=3, every=6)
+    if cell.fault == "slow":
+        return FaultPlan(fail_fraction=0.0, slow_fraction=0.5,
+                         slow_delay=2, slow_intensity=2,
+                         slow_start=2, slow_stop=10)
+    return None
+
+
+def static_skip(cell: Cell, cfg: GraphConfig, prog) -> Optional[str]:
+    """Reason this cell is statically invalid, or None.  Uses the SAME
+    gate as production (``effective_compression``): a cell whose
+    requested wire mode would be gated to a different effective mode is
+    not this scenario — running it would silently measure another one."""
+    if cell.wire == "none":
+        return None
+    eff = ex_mod.effective_compression(
+        cell.wire, prog.dtype, prog.wire_bound(cfg.num_vertices),
+        prog.aggregator.idempotent)
+    if eff == cell.wire:
+        return None
+    if not prog.aggregator.idempotent:
+        return (f"lossy wire {cell.wire} refused under non-idempotent "
+                f"{prog.aggregator.name.upper()} (gated to {eff})")
+    return (f"wire {cell.wire} gated to {eff}: labels exceed the "
+            f"{cell.wire} sentinel bound")
+
+
+def _dijkstra_directed(n: int, edges: np.ndarray, w: np.ndarray,
+                       source: int) -> np.ndarray:
+    import heapq
+    adj: list[list[tuple[int, float]]] = [[] for _ in range(n)]
+    for (s, d), wt in zip(edges, w):
+        adj[int(s)].append((int(d), float(wt)))
+    dist = np.full(n, np.inf)
+    dist[source] = 0.0
+    pq = [(0.0, source)]
+    while pq:
+        du, u = heapq.heappop(pq)
+        if du > dist[u]:
+            continue
+        for v, wt in adj[u]:
+            nd = du + wt
+            if nd < dist[v]:
+                dist[v] = nd
+                heapq.heappush(pq, (nd, v))
+    return dist
+
+
+# ======================================================================
+# Reference fixpoints (one per program, validated against host oracles)
+# ======================================================================
+class Reference:
+    def __init__(self, program: str):
+        self.cfg = program_cfg(program)
+        self.graph = G.build_sharded_graph(self.cfg)
+        self.prog = PR.get_program(self.cfg)
+        _, state, tot = run_asymp(self.cfg, graph=self.graph)
+        assert tot["converged"], f"reference {program} did not converge"
+        self.state = state
+        self.totals = tot
+        self.out = merger.extract(state, self.graph, self.prog)
+        self.oracle_note = self._check_oracle()
+
+    def _check_oracle(self) -> str:
+        """Validate the reference cell against an independent host
+        oracle — every other cell is compared to the reference, so the
+        reference itself must not free-float."""
+        g, cfg, n = self.graph, self.cfg, self.graph.num_real_vertices
+        if cfg.algorithm == "cc":
+            oracle = G.cc_oracle(n, csr_edges(g))
+            assert (self.out == oracle).all(), "cc reference != union-find"
+            return "oracle=union_find"
+        if cfg.algorithm == "reachability":
+            oracle = G.reachability_oracle(n, csr_edges(g),
+                                           source=cfg.source)
+            assert (self.out == oracle).all(), \
+                "reachability reference != component oracle"
+            return "oracle=component"
+        if cfg.algorithm == "sssp":
+            # directed dijkstra over the EXACT edges the engine ran on:
+            # the sharded graph's symmetrized pairs carry independent
+            # weights per direction, so G.sssp_oracle's re-symmetrization
+            # would invent cheaper reverse edges
+            edges, w = csr_edges(g, with_weights=True)
+            oracle = _dijkstra_directed(n, edges, w, cfg.source)
+            assert np.allclose(self.out, oracle, rtol=1e-5, atol=1e-5), \
+                "sssp reference != dijkstra"
+            return "oracle=dijkstra"
+        if cfg.algorithm == "pagerank":
+            from repro.kernels.ops import pagerank as dense_pagerank
+            oracle = np.asarray(dense_pagerank(
+                g, damping=cfg.damping, iters=80, use_kernel=False,
+                dangling="absorb"))
+            l1 = float(np.abs(self.out.astype(np.float64) / n
+                              - oracle).sum())
+            assert l1 < 1e-3, f"pagerank reference off oracle (L1={l1:.2e})"
+            mass = merger.mass_balance(self.state, g, cfg.damping)
+            assert abs(mass - 1.0) < 1e-5, f"mass not conserved ({mass})"
+            return f"oracle=dense_pull;ref_l1={l1:.2e}"
+        raise AssertionError(f"no oracle for {cfg.algorithm}")
+
+
+# ======================================================================
+# Cell execution + verdict
+# ======================================================================
+def cell_verdict(cell: Cell, ref: Reference, state, out, tot
+                 ) -> tuple[str, str]:
+    """(verdict, note) for one converged cell against its reference."""
+    if not tot["converged"]:
+        return "fail", "did_not_converge"
+    prog, g = ref.prog, ref.graph
+    if not prog.aggregator.idempotent:
+        n = g.num_real_vertices
+        l1 = float(np.abs(out.astype(np.float64) / n
+                          - ref.out.astype(np.float64) / n).sum())
+        bound = 2 * prog.push_eps / (1 - ref.cfg.damping)
+        mass = merger.mass_balance(state, g, ref.cfg.damping)
+        ok = l1 < bound and abs(mass - 1.0) < 1e-5
+        return ("pass" if ok else "fail",
+                f"l1={l1:.2e};l1_bound={bound:.1e};mass={mass:.8f}")
+    lossy_float = cell.wire != "none" and prog.dtype == "float32"
+    if not lossy_float:
+        ok = bool((np.asarray(out) == np.asarray(ref.out)).all())
+        return ("pass" if ok else "fail", f"identical={ok}")
+    # lossy float wire: directional guarantee, not bitwise identity —
+    # ceil-quantized min-monotone values never under-estimate (floor /
+    # max-monotone mirrors it), and the reachable set cannot change
+    fin_ref = np.isfinite(ref.out)
+    fin_out = np.isfinite(out)
+    same_support = bool((fin_ref == fin_out).all())
+    if prog.aggregator.quantize_direction == "up":
+        directional = bool((out[fin_ref] >= ref.out[fin_ref] - 1e-5).all())
+    else:
+        directional = bool((out[fin_out] <= ref.out[fin_out] + 1e-5).all())
+    linf = float(np.abs(out[fin_ref] - ref.out[fin_ref]).max(initial=0.0))
+    ok = same_support and directional
+    return ("pass" if ok else "fail",
+            f"directional={directional};same_support={same_support};"
+            f"linf={linf:.3g}")
+
+
+def run_cells(cells: list[Cell], verbose: bool = True) -> dict:
+    """Run every cell (skipping statically-invalid ones), emit one row
+    per cell, and return the counts."""
+    refs: dict[str, Reference] = {}
+    counts = {"pass": 0, "fail": 0, "skip": 0}
+    for cell in cells:
+        if cell.program not in refs:
+            refs[cell.program] = Reference(cell.program)
+        ref = refs[cell.program]
+        cfg = cell_cfg(cell, ref.cfg)
+        reason = static_skip(cell, cfg, ref.prog)
+        if reason is not None:
+            counts["skip"] += 1
+            emit(f"cell/{cell.key}", 0.0, f"reason={reason}",
+                 verdict="skip", config=cfg)
+            continue
+        if cell.is_base:
+            state, tot = ref.state, ref.totals
+            out = ref.out
+        else:
+            _, state, tot = run_asymp(cfg, graph=ref.graph,
+                                      fault_plan=cell_fault_plan(cell))
+            out = merger.extract(state, ref.graph, ref.prog)
+        verdict, note = cell_verdict(cell, ref, state, out, tot)
+        counts[verdict if verdict in counts else "fail"] += 1
+        derived = (f"ticks={tot['ticks']};sent={tot['sent']};"
+                   f"accepted={tot['accepted']};pending={tot['pending']};"
+                   f"failures={tot['failures']};"
+                   f"replayed={tot['replayed']};{note}")
+        if cell.is_base:
+            derived += f";{ref.oracle_note}"
+        emit(f"cell/{cell.key}", tot["wall_s"] * 1e6, derived,
+             verdict=verdict, config=cfg)
+        if verbose and verdict != "pass":
+            print(f"   !! {cell.key}: {verdict} ({note})")
+    emit("matrix/summary", 0.0,
+         f"cells={len(cells)};valid={counts['pass'] + counts['fail']};"
+         f"green={counts['pass']};failed={counts['fail']};"
+         f"skipped={counts['skip']}")
+    return counts
+
+
+def smoke() -> None:
+    """CI gate: one-factor-at-a-time cells for every program; every
+    statically-valid cell must hold its fixpoint verdict."""
+    cells = smoke_cells()
+    print(f"== scenario matrix (smoke): {len(cells)} cells, programs x "
+          "{latency, fault, wire, schedule} one-factor-at-a-time ==")
+    counts = run_cells(cells)
+    valid = counts["pass"] + counts["fail"]
+    assert counts["fail"] == 0, \
+        f"matrix smoke: {counts['fail']} cell(s) failed their verdict"
+    assert valid >= MIN_SMOKE_CELLS, \
+        (f"matrix smoke: only {valid} valid cells "
+         f"(floor {MIN_SMOKE_CELLS}) — axis coverage shrank")
+    print(f"== smoke OK: {counts['pass']}/{valid} valid cells green, "
+          f"{counts['skip']} statically skipped ==")
+
+
+def main() -> None:
+    cells = all_cells()
+    print(f"== scenario matrix (full): {len(cells)} cells ==")
+    counts = run_cells(cells)
+    valid = counts["pass"] + counts["fail"]
+    print(f"== matrix done: {counts['pass']}/{valid} valid cells green, "
+          f"{counts['skip']} statically skipped ==")
+    if counts["fail"]:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    bench_cli(AREA, main, smoke)

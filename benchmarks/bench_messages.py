@@ -14,11 +14,13 @@ import dataclasses
 
 import numpy as np
 
-from benchmarks.common import emit, run_asymp
+from benchmarks.common import bench_cli, emit, run_asymp
 from repro.configs.base import GraphConfig
 from repro.core import engine as E
 from repro.core import merger
 from repro.core import programs as prog_mod
+
+AREA = "messages"
 
 
 def table2() -> None:
@@ -33,7 +35,8 @@ def table2() -> None:
         per_edge = tot["sent"] / max(g.num_edges, 1)
         emit(f"table2/{gen}", tot["wall_s"] * 1e6,
              f"V={g.num_real_vertices};E={g.num_edges};"
-             f"messages={tot['sent']};msgs_per_edge={per_edge:.2f}")
+             f"messages={tot['sent']};msgs_per_edge={per_edge:.2f}",
+             config=cfg)
 
 
 def wire_study() -> None:
@@ -55,14 +58,15 @@ def wire_study() -> None:
         results[mode] = (per_tick, per_tick * tot["ticks"], labels, tot)
         emit(f"wire/{mode}", tot["wall_s"] * 1e6,
              f"ticks={tot['ticks']};bytes_per_tick={per_tick};"
-             f"total_wire_bytes={per_tick * tot['ticks']}")
+             f"total_wire_bytes={per_tick * tot['ticks']}", config=cfg)
     raw, comp = results["none"], results["int16"]
-    assert (raw[2] == comp[2]).all(), \
-        "compressed exchange changed the CC fixpoint"
+    identical = bool((raw[2] == comp[2]).all())
     reduction = raw[0] / comp[0]
     emit("wire/reduction", 0.0,
-         f"labels_identical=True;bytes_reduction={reduction:.2f}x;"
-         f"raw_total={raw[1]};compressed_total={comp[1]}")
+         f"labels_identical={identical};bytes_reduction_x={reduction:.2f};"
+         f"raw_total={raw[1]};compressed_total={comp[1]}",
+         verdict="pass" if identical else "fail")
+    assert identical, "compressed exchange changed the CC fixpoint"
     print(f"   int16 wire ships {reduction:.2f}x fewer bytes/tick; "
           f"CC labels identical on {np.size(raw[2])} vertices")
 
@@ -95,14 +99,17 @@ def wire_study_semirings() -> None:
             emit(f"wire/{algo}/{m}", tot["wall_s"] * 1e6,
                  f"agg={prog.aggregator.name};ticks={tot['ticks']};"
                  f"bytes_per_tick={codec.wire_bytes_per_tick()};"
-                 f"dir={codec.quantize_direction}")
+                 f"dir={codec.quantize_direction}", config=cfg)
         if exact:
-            assert (outs["none"] == outs[mode]).all(), \
-                f"compressed exchange changed the {algo} fixpoint"
+            ok = bool((outs["none"] == outs[mode]).all())
+            note = f"identical={ok}"
         else:  # floor-quantized widths may undershoot, never overshoot
             fin = np.isfinite(outs["none"])
-            assert (outs[mode][fin] <= outs["none"][fin] + 1e-6).all(), \
-                "compressed widest-path over-estimated a width"
+            ok = bool((outs[mode][fin] <= outs["none"][fin] + 1e-6).all())
+            note = f"never_over_estimates={ok}"
+        emit(f"wire/{algo}/verdict", 0.0, note,
+             verdict="pass" if ok else "fail")
+        assert ok, f"compressed exchange broke the {algo} fixpoint"
         print(f"   {algo}: {mode} wire "
               f"{'bit-exact' if exact else 'never over-estimates'}")
 
@@ -114,4 +121,4 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    bench_cli(AREA, main)

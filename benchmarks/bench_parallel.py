@@ -7,9 +7,11 @@ from __future__ import annotations
 
 import dataclasses
 
-from benchmarks.common import emit, run_asymp
+from benchmarks.common import bench_cli, emit, run_asymp
 from repro.configs.base import GraphConfig
 from repro.core import graph as G
+
+AREA = "parallel"
 
 
 def main() -> None:
@@ -30,8 +32,9 @@ def main() -> None:
              f"ticks={tot['ticks']};tick_speedup_x="
              f"{base['ticks'] / tot['ticks']:.2f};"
              f"messages={tot['sent']};"
-             f"msg_growth_x={tot['sent'] / max(base['sent'], 1):.2f}")
+             f"msg_growth_x={tot['sent'] / max(base['sent'], 1):.2f}",
+             config=cfg)
 
 
 if __name__ == "__main__":
-    main()
+    bench_cli(AREA, main)

@@ -8,9 +8,11 @@ from __future__ import annotations
 
 import dataclasses
 
-from benchmarks.common import emit, run_asymp
+from benchmarks.common import bench_cli, emit, run_asymp
 from repro.configs.base import GraphConfig
 from repro.core import graph as G
+
+AREA = "priority"
 
 
 def smoke() -> None:
@@ -28,9 +30,12 @@ def smoke() -> None:
         assert tot["converged"], strategy
         sent[strategy] = tot["sent"]
         emit(f"smoke/fig9b/{strategy}", tot["wall_s"] * 1e6,
-             f"sent={tot['sent']};ticks={tot['ticks']}")
-    assert sent["log"] < sent["disabled"], \
-        "smoke: priority scheduling must reduce message volume"
+             f"sent={tot['sent']};ticks={tot['ticks']}", config=cfg)
+    ok = sent["log"] < sent["disabled"]
+    emit("smoke/fig9b/reduction", 0.0,
+         f"sent_ratio={sent['log'] / sent['disabled']:.3f}",
+         verdict="pass" if ok else "fail")
+    assert ok, "smoke: priority scheduling must reduce message volume"
     print("== smoke OK: log priority sends "
           f"{sent['log'] / sent['disabled']:.2f}x the FIFO messages ==")
 
@@ -49,12 +54,8 @@ def main() -> None:
             emit(f"fig9b/{strategy}/enforce{int(frac * 1000)}",
                  tot["wall_s"] * 1e6,
                  f"sent={tot['sent']};accepted={tot['accepted']};"
-                 f"ticks={tot['ticks']}")
+                 f"ticks={tot['ticks']}", config=cfg)
 
 
 if __name__ == "__main__":
-    import sys
-    if "--smoke" in sys.argv:
-        smoke()
-    else:
-        main()
+    bench_cli(AREA, main, smoke)

@@ -6,7 +6,9 @@ shard count (RMAT family + the SSSP variant).
 """
 from __future__ import annotations
 
-from benchmarks.common import emit, graph_family, run_asymp
+from benchmarks.common import bench_cli, emit, graph_family, run_asymp
+
+AREA = "scalability"
 
 
 def smoke() -> None:
@@ -18,10 +20,14 @@ def smoke() -> None:
         assert tot["converged"], cfg.name
         rows.append((g.num_edges, tot["sent"]))
         emit(f"smoke/fig7/{cfg.name}", tot["wall_s"] * 1e6,
-             f"edges={g.num_edges};messages={tot['sent']}")
+             f"edges={g.num_edges};messages={tot['sent']}", config=cfg)
     (e0, m0), (e1, m1) = rows
     growth, edge_growth = m1 / max(m0, 1), e1 / e0
-    assert growth < edge_growth * 2, \
+    ok = growth < edge_growth * 2
+    emit("smoke/fig7/scaling", 0.0,
+         f"msg_growth_x={growth:.2f};edge_growth_x={edge_growth:.2f}",
+         verdict="pass" if ok else "fail")
+    assert ok, \
         f"smoke: message volume grew {growth:.1f}x on {edge_growth:.1f}x edges"
     print("== smoke OK: messages scale with edges "
           f"({growth:.1f}x on {edge_growth:.1f}x) ==")
@@ -38,7 +44,7 @@ def main() -> None:
              f"edges={g.num_edges};rel_edges={g.num_edges / base[0]:.1f};"
              f"rel_time={tot['wall_s'] / base[1]:.2f};"
              f"rel_msgs={tot['sent'] / max(base[2], 1):.2f};"
-             f"ticks={tot['ticks']}")
+             f"ticks={tot['ticks']}", config=cfg)
     base = None
     for cfg in graph_family(sizes=(12, 13, 14), algorithm="sssp",
                             weighted=True):
@@ -47,12 +53,8 @@ def main() -> None:
             base = (g.num_edges, tot["wall_s"], tot["sent"])
         emit(f"fig7/sssp/{cfg.name}", tot["wall_s"] * 1e6,
              f"edges={g.num_edges};rel_time={tot['wall_s'] / base[1]:.2f};"
-             f"rel_msgs={tot['sent'] / max(base[2], 1):.2f}")
+             f"rel_msgs={tot['sent'] / max(base[2], 1):.2f}", config=cfg)
 
 
 if __name__ == "__main__":
-    import sys
-    if "--smoke" in sys.argv:
-        smoke()
-    else:
-        main()
+    bench_cli(AREA, main, smoke)

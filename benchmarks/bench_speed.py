@@ -15,9 +15,11 @@ import dataclasses
 
 import numpy as np
 
-from benchmarks.common import emit, graph_family, run_asymp
+from benchmarks.common import bench_cli, emit, graph_family, run_asymp
 from repro.core import graph as G
 from repro.kernels.ops import bsp_connected_components
+
+AREA = "speed"
 
 
 def smoke() -> None:
@@ -39,13 +41,16 @@ def smoke() -> None:
 
     _, state, tot = run_asymp(cfg, graph=g)
     labels = np.asarray(state.values).reshape(-1)[: g.num_real_vertices]
+    ok = (tot["converged"] and (labels == comp).all()
+          and tot["ticks"] <= 500 and tot["sent"] <= 5 * g.num_edges)
+    emit("smoke/cc", tot["wall_s"] * 1e6,
+         f"ticks={tot['ticks']};messages={tot['sent']}",
+         verdict="pass" if ok else "fail", config=cfg)
     assert tot["converged"], "smoke: cc did not converge"
     assert (labels == comp).all(), "smoke: cc labels drifted from BSP oracle"
     assert tot["ticks"] <= 500, f"smoke: cc tick blow-up ({tot['ticks']})"
     assert tot["sent"] <= 5 * g.num_edges, \
         f"smoke: cc message blow-up ({tot['sent']} vs E={g.num_edges})"
-    emit("smoke/cc", tot["wall_s"] * 1e6,
-         f"ticks={tot['ticks']};messages={tot['sent']}")
 
     # max-aggregator path: labelprop oracle seeded with the BSP components
     cfg_lp = dataclasses.replace(cfg, algorithm="labelprop",
@@ -53,11 +58,14 @@ def smoke() -> None:
     oracle = G.labelprop_oracle(g.num_real_vertices, comp=comp)
     _, state, tot = run_asymp(cfg_lp, graph=g)
     labels = np.asarray(state.values).reshape(-1)[: g.num_real_vertices]
+    ok = (tot["converged"] and (labels == oracle).all()
+          and tot["ticks"] <= 500 and tot["sent"] <= 5 * g.num_edges)
+    emit("smoke/labelprop", tot["wall_s"] * 1e6,
+         f"ticks={tot['ticks']};messages={tot['sent']}",
+         verdict="pass" if ok else "fail", config=cfg_lp)
     assert tot["converged"], "smoke: labelprop did not converge"
     assert (labels == oracle).all(), "smoke: labelprop labels wrong"
     assert tot["ticks"] <= 500 and tot["sent"] <= 5 * g.num_edges
-    emit("smoke/labelprop", tot["wall_s"] * 1e6,
-         f"ticks={tot['ticks']};messages={tot['sent']}")
     print("== smoke OK ==")
 
 
@@ -82,15 +90,13 @@ def main() -> None:
                    ).all())
         msg_ratio = bsp["messages"] / max(tot["sent"], 1)
         emit(f"fig6/{gen}/bsp", bsp_wall * 1e6,
-             f"rounds={bsp['rounds']};messages={bsp['messages']}")
+             f"rounds={bsp['rounds']};messages={bsp['messages']}",
+             config=cfg)
         emit(f"fig6/{gen}/asymp", tot["wall_s"] * 1e6,
              f"ticks={tot['ticks']};messages={tot['sent']};"
-             f"msg_reduction_x={msg_ratio:.1f};match={ok}")
+             f"msg_reduction_x={msg_ratio:.1f};match={ok}",
+             verdict="pass" if ok else "fail", config=cfg)
 
 
 if __name__ == "__main__":
-    import sys
-    if "--smoke" in sys.argv:
-        smoke()
-    else:
-        main()
+    bench_cli(AREA, main, smoke)

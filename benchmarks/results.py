@@ -1,0 +1,342 @@
+"""Machine-readable benchmark results: the perf-trajectory layer.
+
+Every benchmark module runs inside a :func:`collect` scope that owns the
+rows it emits (no process-global row list: a mid-module failure stays
+attributed to *that* module) and, on exit, writes a schema-versioned
+``BENCH_<area>.json`` next to the run:
+
+    {
+      "schema_version": 1,
+      "area": "speed", "mode": "smoke", "status": "ok",
+      "env": {"jax": ..., "backend": ..., "device_count": ...},
+      "calibration_us": <fixed reference workload, for cross-machine
+                         rescaling of wall-clock metrics>,
+      "config_fingerprint": <hash over row names + scenario fingerprints>,
+      "metric_classes": {"ticks": "count", "us_per_call": "time", ...},
+      "rows": [{"name": ..., "module": ..., "scenario": {...}|null,
+                "verdict": "pass"|"fail"|"skip"|null, "units": "us",
+                "us_per_call": ..., "derived": "k=v;...",
+                "metrics": {...}}, ...],
+      "summary": {"rows": N, "verdicts": {"pass": ..., ...}}
+    }
+
+``tools/bench_diff.py`` diffs a fresh run against the committed baseline
+(``benchmarks/baselines/``) and fails CI on unexplained drift; metric
+*classes* decide the tolerance band:
+
+  * ``time``    — wall-clock (``us_per_call``, ``*_us``, ``*_per_s``):
+    noisy, compared with a relative band after calibration rescaling;
+  * ``count``   — deterministic integers (ticks, messages, bytes):
+    compared exactly — the engine is seeded, a count drift is a real
+    behaviour change;
+  * ``quality`` — deterministic floats (oracle L1, mass, ratios):
+    compared with a small relative tolerance (platform float noise);
+  * ``info``    — strings/bools: reported, never failing (verdicts are
+    first-class and DO fail on flip).
+
+Layer contract: this module is imported by every ``bench_*`` module via
+``benchmarks.common`` and by ``tools/bench_diff.py``; it must not import
+from ``benchmarks.bench_*``.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import hashlib
+import json
+import os
+import platform
+import re
+import sys
+import time
+from typing import Any, Optional
+
+SCHEMA_VERSION = 1
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+DEFAULT_OUT_DIR = os.path.join(os.path.dirname(__file__), "..",
+                               "experiments", "bench")
+
+# keys measured in wall-clock (volatile across machines/runs)
+_TIME_RE = re.compile(r"(^|_)(us|ms|wall)($|_)|_per_s$|_s$")
+
+ROW_REQUIRED = ("name", "module", "scenario", "verdict", "units",
+                "us_per_call", "derived", "metrics")
+DOC_REQUIRED = ("schema_version", "area", "mode", "status", "created_unix",
+                "duration_s", "env", "calibration_us", "config_fingerprint",
+                "metric_classes", "rows", "summary")
+VERDICTS = (None, "pass", "fail", "skip")
+
+
+# ======================================================================
+# Metric parsing + classification
+# ======================================================================
+def parse_value(text: str) -> Any:
+    """One ``k=v`` payload -> int | float | bool | str (best effort)."""
+    if text in ("True", "False"):
+        return text == "True"
+    try:
+        return int(text)
+    except ValueError:
+        pass
+    try:
+        return float(text)
+    except ValueError:
+        return text
+
+
+def parse_derived(derived: str) -> dict[str, Any]:
+    """``"ticks=55;l1=1.2e-3;note"`` -> ``{"ticks": 55, "l1": 1.2e-3}``
+    (segments without ``=`` stay in the raw ``derived`` string only)."""
+    out: dict[str, Any] = {}
+    for seg in (derived or "").split(";"):
+        if "=" not in seg:
+            continue
+        k, v = seg.split("=", 1)
+        k = k.strip()
+        if k:
+            out[k] = parse_value(v.strip())
+    return out
+
+
+def classify_metric(key: str, value: Any) -> str:
+    """Metric class for the diff tolerance bands (see module docstring)."""
+    if key == "us_per_call" or _TIME_RE.search(key):
+        return "time"
+    if isinstance(value, bool) or isinstance(value, str):
+        return "info"
+    if isinstance(value, int):
+        return "count"
+    return "quality"
+
+
+# ======================================================================
+# Fingerprints + environment
+# ======================================================================
+def fingerprint(obj: Any) -> str:
+    """Short stable hash of a config-like object (dataclass or jsonable)."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        obj = dataclasses.asdict(obj)
+    blob = json.dumps(obj, sort_keys=True, default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()[:12]
+
+
+def scenario_from_config(cfg, **extra) -> dict[str, Any]:
+    """The machine-readable scenario cell of one GraphConfig run."""
+    sc = {
+        "algorithm": cfg.algorithm,
+        "generator": cfg.generator,
+        "num_vertices": cfg.num_vertices,
+        "avg_degree": cfg.avg_degree,
+        "num_shards": cfg.num_shards,
+        "priority": cfg.priority,
+        "enforce_fraction": cfg.enforce_fraction,
+        "wire": cfg.wire_compression,
+        "latency_profile": cfg.latency_profile,
+        "schedule": cfg.schedule,
+        "config_fingerprint": fingerprint(cfg),
+    }
+    sc.update(extra)
+    return sc
+
+
+def env_info() -> dict[str, Any]:
+    info = {"python": platform.python_version(),
+            "platform": platform.platform()}
+    try:
+        import jax
+        info["jax"] = jax.__version__
+        info["backend"] = jax.default_backend()
+        info["device_count"] = jax.device_count()
+    except Exception as e:  # noqa: BLE001 — env info must never kill a run
+        info["jax"] = f"unavailable: {type(e).__name__}"
+    return info
+
+
+def calibrate(repeats: int = 5) -> float:
+    """Fixed reference workload in us (min over repeats): lets bench_diff
+    rescale wall-clock metrics between the machine that committed a
+    baseline and the machine re-running it."""
+    import numpy as np
+    a = np.random.default_rng(0).standard_normal((384, 384))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        (a @ a).sum()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+# ======================================================================
+# The recorder (one per collect scope == one BENCH_<area>.json)
+# ======================================================================
+class Recorder:
+    def __init__(self, area: str, mode: str = "full"):
+        self.area = area
+        self.mode = mode
+        self.rows: list[dict] = []
+        self.status = "running"
+        self.t0 = time.time()
+
+    def emit(self, name: str, us_per_call: float, derived: str = "", *,
+             module: Optional[str] = None, scenario: Optional[dict] = None,
+             verdict: Optional[str] = None, units: str = "us",
+             metrics: Optional[dict] = None) -> dict:
+        if verdict not in VERDICTS:
+            raise ValueError(f"verdict {verdict!r} not in {VERDICTS[1:]}")
+        m = parse_derived(derived)
+        if metrics:
+            m.update(metrics)
+        row = {"name": name, "module": module or "?",
+               "scenario": scenario, "verdict": verdict, "units": units,
+               "us_per_call": float(us_per_call), "derived": derived,
+               "metrics": m}
+        self.rows.append(row)
+        return row
+
+    # ------------------------------------------------------------------
+    def to_dict(self) -> dict:
+        classes: dict[str, str] = {"us_per_call": "time"}
+        for row in self.rows:
+            for k, v in row["metrics"].items():
+                classes.setdefault(k, classify_metric(k, v))
+        verdicts: dict[str, int] = {}
+        for row in self.rows:
+            key = row["verdict"] or "none"
+            verdicts[key] = verdicts.get(key, 0) + 1
+        fp = fingerprint([
+            (r["module"], r["name"],
+             (r["scenario"] or {}).get("config_fingerprint"))
+            for r in self.rows])
+        return {
+            "schema_version": SCHEMA_VERSION,
+            "area": self.area,
+            "mode": self.mode,
+            "status": self.status,
+            "created_unix": round(self.t0, 3),
+            "duration_s": round(time.time() - self.t0, 3),
+            "env": env_info(),
+            "calibration_us": round(calibrate(), 1),
+            "config_fingerprint": fp,
+            "metric_classes": classes,
+            "rows": self.rows,
+            "summary": {"rows": len(self.rows), "verdicts": verdicts},
+        }
+
+    def write(self, out_dir: Optional[str] = None) -> str:
+        out_dir = out_dir or DEFAULT_OUT_DIR
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, f"BENCH_{self.area}.json")
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=1, sort_keys=False)
+            f.write("\n")
+        return path
+
+
+# ======================================================================
+# The collect scope (rows live HERE, not in a process global)
+# ======================================================================
+_STACK: list[Recorder] = []
+
+
+def current() -> Optional[Recorder]:
+    return _STACK[-1] if _STACK else None
+
+
+@contextlib.contextmanager
+def collect(area: str, mode: str = "full",
+            out_dir: Optional[str] = None, write: bool = True):
+    """Scope all ``emit()`` rows to one module run and write
+    ``BENCH_<area>.json`` on exit — including on failure (the partial
+    file carries ``status: "failed"`` instead of leaking its rows into
+    the next module's results)."""
+    rec = Recorder(area, mode)
+    _STACK.append(rec)
+    try:
+        yield rec
+        rec.status = "ok"
+    except BaseException:
+        rec.status = "failed"
+        raise
+    finally:
+        _STACK.pop()
+        if write:
+            path = rec.write(out_dir)
+            print(f"[results] {rec.status}: {len(rec.rows)} rows -> {path}")
+
+
+def record(name: str, us_per_call: float, derived: str = "",
+           **fields) -> Optional[dict]:
+    """Route one row to the active recorder (no-op outside a scope, so
+    ad-hoc imports of ``benchmarks.common.emit`` keep working)."""
+    rec = current()
+    if rec is None:
+        return None
+    return rec.emit(name, us_per_call, derived, **fields)
+
+
+# ======================================================================
+# Schema validation (hand-rolled: no jsonschema dependency)
+# ======================================================================
+def validate(doc: Any) -> list[str]:
+    """Returns a list of human-readable schema violations (empty = valid)."""
+    errs: list[str] = []
+    if not isinstance(doc, dict):
+        return [f"document is {type(doc).__name__}, expected object"]
+    for key in DOC_REQUIRED:
+        if key not in doc:
+            errs.append(f"missing top-level key {key!r}")
+    if errs:
+        return errs
+    if doc["schema_version"] != SCHEMA_VERSION:
+        errs.append(f"schema_version {doc['schema_version']} != "
+                    f"{SCHEMA_VERSION}")
+    if doc["status"] not in ("ok", "failed", "running"):
+        errs.append(f"bad status {doc['status']!r}")
+    if doc["mode"] not in ("full", "smoke"):
+        errs.append(f"bad mode {doc['mode']!r}")
+    if not isinstance(doc["rows"], list):
+        return errs + ["rows is not a list"]
+    names = set()
+    for i, row in enumerate(doc["rows"]):
+        where = f"rows[{i}]"
+        if not isinstance(row, dict):
+            errs.append(f"{where} is not an object")
+            continue
+        for key in ROW_REQUIRED:
+            if key not in row:
+                errs.append(f"{where} missing {key!r}")
+        if row.get("verdict") not in VERDICTS:
+            errs.append(f"{where} bad verdict {row.get('verdict')!r}")
+        if not isinstance(row.get("metrics"), dict):
+            errs.append(f"{where} metrics is not an object")
+        if not isinstance(row.get("us_per_call"), (int, float)):
+            errs.append(f"{where} us_per_call is not a number")
+        sc = row.get("scenario")
+        if sc is not None and not isinstance(sc, dict):
+            errs.append(f"{where} scenario is neither null nor object")
+        key = (row.get("module"), row.get("name"))
+        if key in names:
+            errs.append(f"{where} duplicate (module, name) {key}")
+        names.add(key)
+    if not isinstance(doc.get("metric_classes"), dict):
+        errs.append("metric_classes is not an object")
+    return errs
+
+
+def load(path: str) -> dict:
+    """Load + validate one BENCH_*.json; raises ValueError on schema
+    violations (a corrupt baseline must fail loudly, not diff quietly)."""
+    with open(path) as f:
+        doc = json.load(f)
+    errs = validate(doc)
+    if errs:
+        raise ValueError(f"{path}: invalid BENCH json: "
+                         + "; ".join(errs[:5]))
+    return doc
+
+
+def caller_module(depth: int = 2) -> str:
+    """``__name__`` of the frame ``depth`` levels up (the bench module
+    that called ``common.emit``) — tags every row with its emitter."""
+    frame = sys._getframe(depth)
+    return frame.f_globals.get("__name__", "?").split(".")[-1]

@@ -78,4 +78,13 @@ CONFIGS: dict[str, GraphConfig] = {
     # production SSSP with quantized float wire (lossy-but-safe ceil grid)
     "asymp_sssp_wire_prod": rmat(26, shards=512, algorithm="sssp",
                                  weighted=True, wire_compression="int16"),
+    # production crowded tick (dry-run only): the deferred-delivery ring +
+    # throttle pytree is a different lowering than the plain tick, so the
+    # 256/512-chip meshes compile it separately — the structural twin of
+    # the scenario matrix's crowded x dist cells
+    "asymp_cc_crowded_prod": rmat(26, shards=512, algorithm="cc",
+                                  latency_profile="stragglers",
+                                  slow_fraction=0.5, link_delay=2,
+                                  slow_intensity=4,
+                                  enforce_fraction=1.0),
 }

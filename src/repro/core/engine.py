@@ -1372,6 +1372,36 @@ def lower_tick_for_mesh(cfg: GraphConfig, mesh_2d, n_workers: int):
             astate, g, delays, fire, window).compile()
         info["ring_slots"] = L1
         return compiled, info
+    if cfg.latency_profile != "none":
+        # crowded sync tick: a different pytree than the plain tick (the
+        # deferred-delivery ring plus replicated delays/throttle riders),
+        # so big-mesh dry runs need their own lowering — this is what the
+        # scenario matrix's crowded x dist cells compile in production
+        from repro.dist import latency as lat_mod
+        lat = lat_mod.from_config(cfg)
+        L1 = int(lat.max_delay) + 1
+        cap = ep.route_capacity
+        cstate = CrowdedState(
+            state,
+            ex_mod.DelayRing(
+                jax.ShapeDtypeStruct((n_workers, L1, n_workers, cap),
+                                     prog.jdtype, sharding=sh(Pw)),
+                jax.ShapeDtypeStruct((n_workers, L1, n_workers, cap),
+                                     jnp.int32, sharding=sh(Pw)),
+                jax.ShapeDtypeStruct((n_workers, L1, n_workers),
+                                     jnp.int32, sharding=sh(Pw))),
+            jax.ShapeDtypeStruct((n_workers, vs), jnp.bool_,
+                                 sharding=sh(Pw)))
+        delays = jax.ShapeDtypeStruct((n_workers, n_workers), jnp.int32,
+                                      sharding=sh(P()))
+        throttle = jax.ShapeDtypeStruct((n_workers,), jnp.int32,
+                                        sharding=sh(P()))
+        tick_fn = make_crowded_dist_tick(prog, ep, mesh, prog.weighted)
+        compiled = jax.jit(tick_fn, donate_argnums=(0,)).lower(
+            cstate, g, delays, throttle).compile()
+        info["ring_slots"] = L1
+        info["latency_profile"] = cfg.latency_profile
+        return compiled, info
     tick_fn = make_dist_tick(prog, ep, mesh, prog.weighted)
     compiled = jax.jit(tick_fn, donate_argnums=(0,)).lower(state, g).compile()
     return compiled, info

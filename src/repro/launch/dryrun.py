@@ -14,6 +14,9 @@ Usage:
   python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k [--multipod]
   python -m repro.launch.dryrun --all [--multipod] [--arch-filter moe]
   python -m repro.launch.dryrun --graph asymp_cc_prod   (paper's own config)
+  python -m repro.launch.dryrun --graph asymp_cc_crowded_prod
+      (crowded tick: deferred-delivery ring + throttle riders lower on the
+       production mesh like the plain and async ticks)
 """
 from __future__ import annotations
 

@@ -1,0 +1,313 @@
+"""The perf-trajectory harness: BENCH_*.json schema, per-module row
+scoping, the warmup-aware timer, the bench_diff drift gate (pass /
+injected-regression / refresh), and the scenario matrix's cell-skip
+rules + fixpoint verdicts.
+"""
+import dataclasses
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import common, results
+from tools import bench_diff
+
+
+# ======================================================================
+# results layer: parsing, scoping, schema
+# ======================================================================
+class TestParsing:
+    def test_derived_string_to_typed_metrics(self):
+        m = results.parse_derived(
+            "ticks=55;l1=1.2e-3;match=True;gen=rmat;note;x=")
+        assert m == {"ticks": 55, "l1": 1.2e-3, "match": True,
+                     "gen": "rmat", "x": ""}
+        assert isinstance(m["ticks"], int) and isinstance(m["l1"], float)
+
+    def test_metric_classes(self):
+        assert results.classify_metric("us_per_call", 1.0) == "time"
+        assert results.classify_metric("compile_us", 5.0) == "time"
+        assert results.classify_metric("wall_s", 1.0) == "time"
+        assert results.classify_metric("Medges_per_s", 3.0) == "time"
+        assert results.classify_metric("ticks", 55) == "count"
+        assert results.classify_metric("bytes_per_tick", 1024) == "count"
+        assert results.classify_metric("l1", 1e-3) == "quality"
+        assert results.classify_metric("match", True) == "info"
+        assert results.classify_metric("gen", "rmat") == "info"
+
+    def test_fingerprint_stable_and_config_sensitive(self):
+        from repro.configs.base import GraphConfig
+        cfg = GraphConfig(name="t", algorithm="cc", num_vertices=64,
+                          avg_degree=4, generator="rmat", num_shards=2)
+        assert results.fingerprint(cfg) == results.fingerprint(cfg)
+        cfg2 = dataclasses.replace(cfg, wire_compression="int16")
+        assert results.fingerprint(cfg) != results.fingerprint(cfg2)
+        sc = results.scenario_from_config(cfg2)
+        assert sc["wire"] == "int16" and sc["algorithm"] == "cc"
+
+
+class TestCollectScope:
+    def test_rows_scoped_per_module_no_global_leak(self, tmp_path):
+        """The old process-global ROWS leaked across modules; collect()
+        scopes rows to one area file and tags each with its emitter."""
+        with results.collect("areaA", out_dir=str(tmp_path)):
+            common.emit("row/a", 1.0, "ticks=1")
+        with results.collect("areaB", out_dir=str(tmp_path)):
+            common.emit("row/b", 2.0, "ticks=2")
+        a = results.load(tmp_path / "BENCH_areaA.json")
+        b = results.load(tmp_path / "BENCH_areaB.json")
+        assert [r["name"] for r in a["rows"]] == ["row/a"]
+        assert [r["name"] for r in b["rows"]] == ["row/b"]
+        assert a["rows"][0]["module"] == "test_bench_results"
+
+    def test_failure_writes_failed_status_not_leak(self, tmp_path):
+        with pytest.raises(RuntimeError):
+            with results.collect("boom", out_dir=str(tmp_path)):
+                common.emit("partial", 1.0)
+                raise RuntimeError("mid-module failure")
+        doc = json.load(open(tmp_path / "BENCH_boom.json"))
+        assert doc["status"] == "failed"
+        assert [r["name"] for r in doc["rows"]] == ["partial"]
+        assert results.current() is None  # stack unwound
+
+    def test_emit_outside_scope_is_harmless(self, capsys):
+        common.emit("loose", 3.0, "ticks=3")
+        assert "loose,3.0" in capsys.readouterr().out
+
+    def test_emitted_doc_is_schema_valid(self, tmp_path):
+        from repro.configs.base import GraphConfig
+        cfg = GraphConfig(name="t", algorithm="cc", num_vertices=64,
+                          avg_degree=4, generator="rmat", num_shards=2)
+        with results.collect("valid", mode="smoke", out_dir=str(tmp_path)):
+            common.emit("r1", 10.0, "ticks=5;l1=0.1", config=cfg,
+                        verdict="pass")
+            common.emit("r2", 0.0, "reason=gated", verdict="skip")
+        doc = results.load(tmp_path / "BENCH_valid.json")
+        assert results.validate(doc) == []
+        assert doc["summary"]["verdicts"] == {"pass": 1, "skip": 1}
+        assert doc["metric_classes"]["ticks"] == "count"
+        assert doc["metric_classes"]["l1"] == "quality"
+        r1 = doc["rows"][0]
+        assert r1["scenario"]["algorithm"] == "cc"
+        assert r1["metrics"] == {"ticks": 5, "l1": 0.1}
+
+    def test_validate_catches_violations(self):
+        with results.collect("v", write=False) as rec:
+            rec.emit("dup", 1.0, module="m")
+            rec.emit("dup", 1.0, module="m")
+            doc = rec.to_dict()
+        assert any("duplicate" in e for e in results.validate(doc))
+        assert results.validate({"schema_version": 1})  # missing keys
+        assert results.validate([1, 2])  # not an object
+        with results.collect("v2", write=False) as rec:
+            doc = rec.to_dict()
+        doc["rows"] = [{"name": "x"}]
+        assert any("missing" in e for e in results.validate(doc))
+
+    def test_bad_verdict_rejected(self):
+        with results.collect("v3", write=False) as rec:
+            with pytest.raises(ValueError):
+                rec.emit("r", 1.0, verdict="maybe")
+
+
+class TestTimedWarmup:
+    def test_first_call_separated_from_steady_state(self):
+        """The old timed() had no warmup: with repeats=1 the reported
+        number WAS the jit-compile time.  Now the first (warmup) call is
+        reported separately as compile_us."""
+        calls = []
+
+        def fn():
+            import time
+            calls.append(1)
+            if len(calls) == 1:
+                time.sleep(0.05)  # "compilation"
+
+        _, t = common.timed(fn, repeats=2)
+        assert len(calls) == 3  # 1 warmup + 2 measured
+        assert t.repeats == 2
+        assert t.compile_us > 40_000  # saw the slow first call
+        assert t.steady_us < t.compile_us / 4  # steady state excludes it
+
+    def test_zero_warmup_keeps_old_behavior(self):
+        out, t = common.timed(lambda: 7, repeats=1, warmup=0)
+        assert out == 7 and t.compile_us == 0.0
+
+
+# ======================================================================
+# bench_diff: the drift gate
+# ======================================================================
+def _mk_doc(tmp_path, sub, rows, calibration=100.0, status="ok",
+            mode="smoke", area="t"):
+    d = tmp_path / sub
+    d.mkdir(exist_ok=True)
+    with results.collect(area, mode=mode, write=False) as rec:
+        for row in rows:
+            rec.emit(**row)
+        rec.status = status
+        doc = rec.to_dict()
+    # statuses other than ok are normally set by the scope itself
+    doc["status"] = status
+    doc["calibration_us"] = calibration
+    path = d / f"BENCH_{area}.json"
+    path.write_text(json.dumps(doc))
+    return str(d)
+
+
+ROW = dict(name="cell/x", module="m", us_per_call=1000.0,
+           derived="ticks=10;l1=0.5", verdict="pass")
+
+
+class TestBenchDiff:
+    def _run(self, base_dir, fresh_dir, *extra):
+        return bench_diff.main(["--baseline", base_dir, "--fresh", fresh_dir,
+                                "--areas", "t", *extra])
+
+    def test_identical_run_passes(self, tmp_path, capsys):
+        b = _mk_doc(tmp_path, "base", [ROW])
+        f = _mk_doc(tmp_path, "fresh", [ROW])
+        assert self._run(b, f) == 0
+        assert "trajectory holds" in capsys.readouterr().out
+
+    def test_2x_wallclock_regression_fails(self, tmp_path, capsys):
+        b = _mk_doc(tmp_path, "base", [dict(ROW, us_per_call=100_000.0)])
+        f = _mk_doc(tmp_path, "fresh", [dict(ROW, us_per_call=200_000.0)])
+        assert self._run(b, f) == 1
+        assert "us_per_call (time)" in capsys.readouterr().out
+
+    def test_small_absolute_change_is_floored(self, tmp_path):
+        # 3x relative but only 200us absolute: under --time-floor-us
+        b = _mk_doc(tmp_path, "base", [dict(ROW, us_per_call=100.0)])
+        f = _mk_doc(tmp_path, "fresh", [dict(ROW, us_per_call=300.0)])
+        assert self._run(b, f) == 0
+
+    def test_calibration_rescales_wallclock(self, tmp_path):
+        # 2x slower wall-clock on a 2x slower machine: not a regression
+        b = _mk_doc(tmp_path, "base", [dict(ROW, us_per_call=100_000.0)],
+                    calibration=100.0)
+        f = _mk_doc(tmp_path, "fresh", [dict(ROW, us_per_call=200_000.0)],
+                    calibration=200.0)
+        assert self._run(b, f) == 0
+        assert self._run(b, f, "--no-calibration") == 1
+
+    def test_verdict_flip_fails(self, tmp_path, capsys):
+        b = _mk_doc(tmp_path, "base", [ROW])
+        f = _mk_doc(tmp_path, "fresh", [dict(ROW, verdict="fail")])
+        assert self._run(b, f) == 1
+        assert "verdict flipped" in capsys.readouterr().out
+
+    def test_count_drift_fails_exactly(self, tmp_path, capsys):
+        b = _mk_doc(tmp_path, "base", [ROW])
+        f = _mk_doc(tmp_path, "fresh",
+                    [dict(ROW, derived="ticks=11;l1=0.5")])
+        assert self._run(b, f) == 1
+        assert "ticks (count)" in capsys.readouterr().out
+
+    def test_quality_band(self, tmp_path):
+        b = _mk_doc(tmp_path, "base", [ROW])
+        ok = _mk_doc(tmp_path, "f1", [dict(ROW, derived="ticks=10;l1=0.52")])
+        bad = _mk_doc(tmp_path, "f2", [dict(ROW, derived="ticks=10;l1=0.7")])
+        assert self._run(b, ok) == 0  # within 10%
+        assert self._run(b, bad) == 1
+
+    def test_missing_row_fails_new_row_warns(self, tmp_path, capsys):
+        row2 = dict(ROW, name="cell/y")
+        b = _mk_doc(tmp_path, "base", [ROW])
+        f = _mk_doc(tmp_path, "fresh", [ROW, row2])
+        assert self._run(b, f) == 0  # new row: warn only
+        assert "new row" in capsys.readouterr().out
+        b2 = _mk_doc(tmp_path, "base2", [ROW, row2], area="t")
+        assert self._run(b2, _mk_doc(tmp_path, "fresh2", [ROW]),) == 1
+
+    def test_failed_fresh_status_fails(self, tmp_path):
+        b = _mk_doc(tmp_path, "base", [ROW])
+        f = _mk_doc(tmp_path, "fresh", [ROW], status="failed")
+        assert self._run(b, f) == 1
+
+    def test_refresh_baseline_adopts_fresh(self, tmp_path):
+        f = _mk_doc(tmp_path, "fresh", [ROW])
+        base_dir = str(tmp_path / "newbase")
+        assert bench_diff.main(["--baseline", base_dir, "--fresh", f,
+                                "--areas", "t", "--refresh-baseline"]) == 0
+        assert self._run(base_dir, f) == 0
+
+    def test_refresh_refuses_failed_run(self, tmp_path):
+        f = _mk_doc(tmp_path, "fresh", [ROW], status="failed")
+        assert bench_diff.main(["--baseline", str(tmp_path / "nb"),
+                                "--fresh", f, "--areas", "t",
+                                "--refresh-baseline"]) == 1
+
+    def test_missing_baseline_fails_with_hint(self, tmp_path, capsys):
+        f = _mk_doc(tmp_path, "fresh", [ROW])
+        assert self._run(str(tmp_path / "nope"), f) == 1
+        assert "refresh-baseline" in capsys.readouterr().out
+
+
+# ======================================================================
+# scenario matrix: skip rules + verdicts
+# ======================================================================
+class TestMatrixCells:
+    def test_smoke_covers_every_axis_for_every_program(self):
+        from benchmarks import bench_matrix as M
+        cells = M.smoke_cells()
+        assert len(cells) == len(M.PROGRAMS) * 8
+        for prog in M.PROGRAMS:
+            mine = [c for c in cells if c.program == prog]
+            assert {c.latency for c in mine} == set(M.LATENCY)
+            assert {c.fault for c in mine} == set(M.FAULT)
+            assert {c.wire for c in mine} == set(M.WIRE)
+            assert {c.schedule for c in mine} == set(M.SCHEDULE)
+
+    def test_static_skips_lossy_wire_under_sum_and_sentinel_overflow(self):
+        from benchmarks import bench_matrix as M
+        from repro.core import programs as PR
+        skips = {}
+        for cell in M.smoke_cells():
+            cfg = M.program_cfg(cell.program)
+            prog = PR.get_program(cfg)
+            reason = M.static_skip(cell, M.cell_cfg(cell, cfg), prog)
+            if reason:
+                skips[cell.key] = reason
+        # pagerank (SUM, non-idempotent): every lossy wire refused
+        assert "pagerank/none/none/int16/sync" in skips
+        assert "pagerank/none/none/int8/sync" in skips
+        assert "SUM" in skips["pagerank/none/none/int16/sync"]
+        # cc labels 0..511 exceed the int8 sentinel (127): degrades
+        assert "cc/none/none/int8/sync" in skips
+        # the valid-cell floor the CI gate asserts
+        valid = len(M.smoke_cells()) - len(skips)
+        assert valid >= M.MIN_SMOKE_CELLS
+        # sssp floats and reachability bits ride lossy wire validly
+        assert "sssp/none/none/int8/sync" not in skips
+        assert "reachability/none/none/int8/sync" not in skips
+
+    def test_full_product_enumerates_every_combination(self):
+        from benchmarks import bench_matrix as M
+        cells = M.all_cells()
+        assert len(cells) == 4 * 3 * 3 * 3 * 2
+        assert len(set(c.key for c in cells)) == len(cells)
+
+    def test_micro_matrix_run_green_verdicts(self, tmp_path):
+        """A real (tiny) slice of the matrix: reference + three
+        non-trivial cells must all hold their fixpoint verdicts and land
+        in a schema-valid BENCH_matrix.json."""
+        from benchmarks import bench_matrix as M
+        cells = [M.base_cell("cc"),
+                 dataclasses.replace(M.base_cell("cc"), fault="kill"),
+                 dataclasses.replace(M.base_cell("cc"), wire="int16"),
+                 dataclasses.replace(M.base_cell("cc"),
+                                     latency="stragglers")]
+        with results.collect("matrix", mode="smoke",
+                             out_dir=str(tmp_path)):
+            counts = M.run_cells(cells, verbose=False)
+        assert counts == {"pass": 4, "fail": 0, "skip": 0}
+        doc = results.load(tmp_path / "BENCH_matrix.json")
+        cell_rows = [r for r in doc["rows"] if r["name"].startswith("cell/")]
+        assert all(r["verdict"] == "pass" for r in cell_rows)
+        kill = next(r for r in cell_rows if "/kill/" in r["name"])
+        assert kill["metrics"]["replayed"] > 0  # recovery was exercised
+        assert kill["metrics"]["identical"] is True

@@ -470,3 +470,21 @@ class TestCrowdedDistTick:
         oracle = G.cc_oracle(g.num_real_vertices, csr_edges(g))
         out = np.asarray(cs_l.core.values).reshape(-1)[:g.num_real_vertices]
         assert (out == oracle).all()
+
+
+    def test_crowded_dryrun_lowers(self):
+        """lower_tick_for_mesh generalizes to the crowded pytree (ring +
+        demote + replicated delays/throttle) without real allocation —
+        the structural gate behind --graph asymp_cc_crowded_prod."""
+        cfg = _cfg("cc", num_shards=1, latency_profile="stragglers",
+                   link_delay=2, slow_fraction=1.0, slow_intensity=4)
+        mesh2d = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                      ("a", "b"))
+        compiled, info = E.lower_tick_for_mesh(cfg, mesh2d, 1)
+        assert compiled is not None
+        assert info["latency_profile"] == "stragglers"
+        assert info["ring_slots"] >= cfg.link_delay + 1
+        # the plain sync lowering must remain latency-free
+        cfg_plain = _cfg("cc", num_shards=1)
+        _, info_plain = E.lower_tick_for_mesh(cfg_plain, mesh2d, 1)
+        assert "ring_slots" not in info_plain

@@ -1,0 +1,240 @@
+#!/usr/bin/env python3
+"""Perf-trajectory gate: diff a fresh benchmark run against the committed
+baseline ``BENCH_*.json`` files and fail on unexplained drift.
+
+    python tools/bench_diff.py                       # CI gate (defaults)
+    python tools/bench_diff.py --areas matrix,speed  # subset
+    python tools/bench_diff.py --refresh-baseline    # adopt the fresh run
+    python tools/bench_diff.py --fresh experiments/bench \
+        --baseline benchmarks/baselines --time-tol 1.75
+
+Drift policy per metric class (classes are read from the BASELINE file,
+so the policy itself is committed; see ``benchmarks/results.py``):
+
+  * ``time``    — wall-clock.  Rescaled by the two files' calibration
+    workloads (cross-machine), then gated by a relative band
+    (``--time-tol``, default 1.75x) with an absolute change floor
+    (``--time-floor-us``) so micro-rows don't flap.  Direction-aware:
+    ``*_per_s`` regresses downward, everything else upward.
+    Improvements are reported, never failing.
+  * ``count``   — deterministic integers: exact match required.
+  * ``quality`` — deterministic floats: ``--quality-tol`` relative band
+    (default 10%: covers platform float noise, catches real movement).
+  * ``info``    — strings/bools: reported as notes only.
+
+Verdict flips (pass <-> fail/skip), missing rows, and a fresh file whose
+``status`` is not ``ok`` always fail.  Rows only present in the fresh
+run are warnings — commit a refreshed baseline to start tracking them.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import shutil
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_ROOT = os.path.dirname(_HERE)
+sys.path.insert(0, _ROOT)
+
+from benchmarks import results  # noqa: E402
+
+DRIFT, WARN, NOTE, IMPROVED = "DRIFT", "WARN", "note", "improved"
+
+
+def _is_number(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def time_direction(key: str) -> int:
+    """+1: larger is a regression (durations); -1: smaller is (rates)."""
+    return -1 if key.endswith("_per_s") else 1
+
+
+def compare_metric(key: str, cls: str, base, fresh, scale: float,
+                   opts) -> tuple[str, str] | None:
+    """One metric cell -> (severity, message) or None if within band."""
+    if cls == "info" or not (_is_number(base) and _is_number(fresh)):
+        if base != fresh:
+            return NOTE, f"{key}: {base!r} -> {fresh!r}"
+        return None
+    if cls == "count":
+        if base != fresh:
+            return DRIFT, f"{key} (count): {base} -> {fresh}"
+        return None
+    if cls == "quality":
+        tol = opts.quality_tol * max(abs(base), 1e-12)
+        if abs(fresh - base) > tol:
+            return DRIFT, (f"{key} (quality): {base:.6g} -> {fresh:.6g} "
+                           f"(tol ±{opts.quality_tol:.0%})")
+        return None
+    # time: rescale the baseline into this machine's clock first
+    expected = base * scale
+    if expected <= 0:
+        return None
+    ratio = fresh / expected
+    direction = time_direction(key)
+    worse = ratio > opts.time_tol if direction > 0 else \
+        ratio < 1.0 / opts.time_tol
+    big_enough = abs(fresh - expected) > opts.time_floor_us
+    if worse and big_enough:
+        return DRIFT, (f"{key} (time): {expected:.0f} -> {fresh:.0f} "
+                       f"({ratio:.2f}x, tol {opts.time_tol:.2f}x, "
+                       f"calib scale {scale:.2f})")
+    better = ratio < 1.0 / opts.time_tol if direction > 0 else \
+        ratio > opts.time_tol
+    if better and big_enough:
+        return IMPROVED, f"{key}: {expected:.0f} -> {fresh:.0f} ({ratio:.2f}x)"
+    return None
+
+
+def diff_area(base_doc: dict, fresh_doc: dict, opts) -> list[tuple[str, str]]:
+    """All findings for one area, most severe first."""
+    findings: list[tuple[str, str]] = []
+    area = fresh_doc["area"]
+    if fresh_doc["status"] != "ok":
+        findings.append((DRIFT, f"fresh run status={fresh_doc['status']!r} "
+                                "(a bench module failed mid-run)"))
+    if base_doc["mode"] != fresh_doc["mode"]:
+        findings.append((DRIFT, f"mode mismatch: baseline "
+                                f"{base_doc['mode']!r} vs fresh "
+                                f"{fresh_doc['mode']!r} — rerun the same "
+                                "mode or --refresh-baseline"))
+        return findings
+    benv, fenv = base_doc.get("env", {}), fresh_doc.get("env", {})
+    if benv.get("jax") != fenv.get("jax"):
+        findings.append((NOTE, f"jax {benv.get('jax')} -> "
+                               f"{fenv.get('jax')}"))
+    scale = 1.0
+    if not opts.no_calibration:
+        b_cal, f_cal = (base_doc.get("calibration_us") or 0,
+                        fresh_doc.get("calibration_us") or 0)
+        if b_cal > 0 and f_cal > 0:
+            scale = f_cal / b_cal
+
+    classes = dict(base_doc.get("metric_classes", {}))
+    classes.update({k: v for k, v in fresh_doc.get(
+        "metric_classes", {}).items() if k not in classes})
+    base_rows = {(r["module"], r["name"]): r for r in base_doc["rows"]}
+    fresh_rows = {(r["module"], r["name"]): r for r in fresh_doc["rows"]}
+
+    for key, brow in base_rows.items():
+        label = f"{area}:{key[0]}/{key[1]}"
+        frow = fresh_rows.get(key)
+        if frow is None:
+            findings.append((DRIFT, f"{label}: row missing from fresh run"))
+            continue
+        if brow["verdict"] != frow["verdict"]:
+            findings.append((DRIFT, f"{label}: verdict flipped "
+                                    f"{brow['verdict']!r} -> "
+                                    f"{frow['verdict']!r}"))
+        bm = dict(brow["metrics"], us_per_call=brow["us_per_call"])
+        fm = dict(frow["metrics"], us_per_call=frow["us_per_call"])
+        for mkey, bval in bm.items():
+            if mkey not in fm:
+                findings.append((WARN, f"{label}: metric {mkey!r} gone"))
+                continue
+            cls = classes.get(mkey) or results.classify_metric(mkey, bval)
+            hit = compare_metric(mkey, cls, bval, fm[mkey], scale, opts)
+            if hit:
+                findings.append((hit[0], f"{label}: {hit[1]}"))
+    for key in fresh_rows.keys() - base_rows.keys():
+        findings.append((WARN, f"{area}:{key[0]}/{key[1]}: new row "
+                               "(not in baseline — refresh to track it)"))
+    order = {DRIFT: 0, WARN: 1, IMPROVED: 2, NOTE: 3}
+    findings.sort(key=lambda f: order[f[0]])
+    return findings
+
+
+def area_of(path: str) -> str:
+    name = os.path.basename(path)
+    return name[len("BENCH_"):-len(".json")]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", default=results.DEFAULT_OUT_DIR,
+                    help="directory of freshly-emitted BENCH_*.json")
+    ap.add_argument("--baseline", default=results.BASELINE_DIR,
+                    help="directory of committed baselines")
+    ap.add_argument("--areas", default="",
+                    help="comma-separated subset (default: every baseline)")
+    ap.add_argument("--time-tol", type=float, default=1.75,
+                    help="relative wall-clock band (default 1.75x)")
+    ap.add_argument("--time-floor-us", type=float, default=50_000,
+                    help="absolute wall-clock change floor in us")
+    ap.add_argument("--quality-tol", type=float, default=0.10,
+                    help="relative band for float quality metrics")
+    ap.add_argument("--no-calibration", action="store_true",
+                    help="skip cross-machine calibration rescaling")
+    ap.add_argument("--refresh-baseline", action="store_true",
+                    help="copy the fresh BENCH_*.json over the baselines "
+                         "(the explicit 'this change is expected' path)")
+    opts = ap.parse_args(argv)
+
+    areas = [a for a in opts.areas.split(",") if a]
+    if not areas:
+        areas = sorted(area_of(p) for p in
+                       glob.glob(os.path.join(opts.baseline, "BENCH_*.json")))
+        if opts.refresh_baseline and not areas:
+            areas = sorted(area_of(p) for p in
+                           glob.glob(os.path.join(opts.fresh,
+                                                  "BENCH_*.json")))
+    if not areas:
+        print(f"bench_diff: no baselines under {opts.baseline} and no "
+              "--areas given; run the benchmarks and --refresh-baseline "
+              "to start the trajectory")
+        return 1
+
+    if opts.refresh_baseline:
+        os.makedirs(opts.baseline, exist_ok=True)
+        for area in areas:
+            src = os.path.join(opts.fresh, f"BENCH_{area}.json")
+            doc = results.load(src)  # a broken file must not become truth
+            if doc["status"] != "ok":
+                print(f"refusing to adopt {src}: status="
+                      f"{doc['status']!r}")
+                return 1
+            shutil.copyfile(src,
+                            os.path.join(opts.baseline,
+                                         f"BENCH_{area}.json"))
+            print(f"baseline refreshed: {area} "
+                  f"({doc['summary']['rows']} rows)")
+        return 0
+
+    failed = False
+    for area in areas:
+        base_path = os.path.join(opts.baseline, f"BENCH_{area}.json")
+        fresh_path = os.path.join(opts.fresh, f"BENCH_{area}.json")
+        if not os.path.exists(base_path):
+            print(f"[DRIFT] {area}: no committed baseline {base_path} "
+                  "(run with --refresh-baseline to start the trajectory)")
+            failed = True
+            continue
+        if not os.path.exists(fresh_path):
+            print(f"[DRIFT] {area}: no fresh run at {fresh_path} "
+                  "(did the benchmark emit its BENCH json?)")
+            failed = True
+            continue
+        base_doc = results.load(base_path)
+        fresh_doc = results.load(fresh_path)
+        findings = diff_area(base_doc, fresh_doc, opts)
+        drifts = [f for f in findings if f[0] == DRIFT]
+        print(f"== {area}: {len(base_doc['rows'])} baseline rows, "
+              f"{len(fresh_doc['rows'])} fresh, "
+              f"{len(drifts)} drift(s) ==")
+        for sev, msg in findings:
+            print(f"  [{sev}] {msg}")
+        failed |= bool(drifts)
+    if failed:
+        print("\nbench_diff: FAILED — unexplained drift against the "
+              "committed trajectory.  If the change is intended, rerun "
+              "with --refresh-baseline and commit the new BENCH_*.json.")
+        return 1
+    print("\nbench_diff: OK — trajectory holds.")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
