@@ -1,0 +1,166 @@
+"""Serving plane: point-query latency (p50/p99), slot-batch throughput,
+and delta freshness — how many ticks the incremental path needs to get
+back to a published fixpoint after a streaming edge delta, vs recomputing
+from scratch.
+
+The smoke subset is the acceptance gate for the incremental path: a
+1-edge insertion delta on rmat13 must reactivate <5% of the vertices,
+reconverge in <25% of the from-scratch tick count, and land on the
+EXACT from-scratch fixpoint (CC is idempotent); a pagerank delta must
+land within the push_eps residual ball.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_cli, emit
+from repro.configs.base import GraphConfig
+from repro.core import engine as E
+from repro.serve.graph import GraphQuery, GraphServer, QueryServer
+
+AREA = "serve"
+
+DELTA_SIZES = (1, 8, 64)
+
+
+def _serve_cfg(log2n: int = 13, **kw) -> GraphConfig:
+    base = dict(name=f"rmat{log2n}", algorithm="cc",
+                num_vertices=1 << log2n, avg_degree=16, generator="rmat",
+                num_shards=8, priority="log", enforce_fraction=0.1)
+    base.update(kw)
+    return GraphConfig(**base)
+
+
+def _query_latency(srv: GraphServer, rng, n_queries: int = 64):
+    """Per-query wall latency through a single-slot QueryServer (one
+    query admitted per step => each step is one query's full path)."""
+    n = srv.graph.num_real_vertices
+    lat = []
+    qs = QueryServer(srv, num_slots=1)
+    for rid in range(n_queries):
+        qs.submit(GraphQuery(rid, "component_of", int(rng.integers(n))))
+        t0 = time.perf_counter()
+        qs.step()
+        lat.append((time.perf_counter() - t0) * 1e6)
+    return np.asarray(lat)
+
+
+def _batch_throughput(srv: GraphServer, rng, n_queries: int = 256,
+                      slots: int = 32):
+    n = srv.graph.num_real_vertices
+    qs = QueryServer(srv, num_slots=slots)
+    for rid in range(n_queries):
+        qs.submit(GraphQuery(rid, "component_of", int(rng.integers(n))))
+    t0 = time.perf_counter()
+    qs.run()
+    wall = time.perf_counter() - t0
+    return qs.served / wall, qs.batches, wall
+
+
+def _freshness(srv: GraphServer, rng, size: int):
+    """Apply one insertion delta of ``size`` edges; return the serve-side
+    stats plus the from-scratch tick count on the SAME patched graph."""
+    n = srv.graph.num_real_vertices
+    ins = [(int(rng.integers(n)), int(rng.integers(n))) for _ in range(size)]
+    t0 = time.perf_counter()
+    stats = srv.apply_delta(insertions=ins)
+    wall = time.perf_counter() - t0
+    sess = srv.sessions["cc"]
+    scratch = E.EngineSession(sess.cfg, graph=srv.graph, prog=sess.prog)
+    scratch.tick_until_quiescent()
+    return stats["cc"], scratch, wall
+
+
+def main() -> None:
+    print("== serving plane: query latency / batch throughput / "
+          "delta freshness ==")
+    cfg = _serve_cfg(13)
+    rng = np.random.default_rng(7)
+    srv = GraphServer(cfg, programs=("cc",))
+    totals = srv.converge()
+    base_ticks = totals["cc"]["ticks"]
+    n = srv.graph.num_real_vertices
+    emit("serve/converge", 0.0, f"ticks={base_ticks};V={n}", config=cfg)
+
+    lat = _query_latency(srv, rng)
+    emit("serve/query_latency", float(np.percentile(lat, 50)),
+         f"p50_us={np.percentile(lat, 50):.1f};"
+         f"p99_us={np.percentile(lat, 99):.1f};n={lat.size}", config=cfg)
+
+    qps, batches, wall = _batch_throughput(srv, rng)
+    emit("serve/batch_throughput", wall * 1e6,
+         f"queries_per_s={qps:.0f};batches={batches}", config=cfg)
+
+    for size in DELTA_SIZES:
+        st, scratch, wall = _freshness(srv, rng, size)
+        emit(f"serve/delta{size:03d}", wall * 1e6,
+             f"reactivated={st.reactivated};"
+             f"reactivated_pct={100.0 * st.reactivated / n:.3f};"
+             f"lag_ticks={st.ticks};"
+             f"scratch_ticks={scratch.totals['ticks']};"
+             f"tick_ratio={st.ticks / max(scratch.totals['ticks'], 1):.3f}",
+             config=cfg)
+
+
+def smoke() -> None:
+    """CI acceptance gate for the incremental serving path (see module
+    docstring for the three thresholds)."""
+    cfg = _serve_cfg(13)
+    rng = np.random.default_rng(11)
+    srv = GraphServer(cfg, programs=("cc",))
+    srv.converge()
+    n = srv.graph.num_real_vertices
+
+    st, scratch, wall = _freshness(srv, rng, 1)
+    ratio = st.ticks / max(scratch.totals["ticks"], 1)
+    react_pct = st.reactivated / n
+    inc = np.asarray(srv.sessions["cc"].state.values)
+    exact = np.array_equal(inc, np.asarray(scratch.state.values))
+    ok = react_pct < 0.05 and ratio < 0.25 and exact
+    emit("smoke/serve/delta1_cc", wall * 1e6,
+         f"reactivated_pct={100 * react_pct:.3f};lag_ticks={st.ticks};"
+         f"scratch_ticks={scratch.totals['ticks']};tick_ratio={ratio:.3f};"
+         f"exact={int(exact)}", verdict="pass" if ok else "fail",
+         config=cfg)
+    assert react_pct < 0.05, \
+        f"smoke: 1-edge delta reactivated {100 * react_pct:.1f}% of V"
+    assert ratio < 0.25, \
+        f"smoke: incremental took {ratio:.2f}x the from-scratch ticks"
+    assert exact, "smoke: incremental CC fixpoint != from-scratch fixpoint"
+    print(f"== smoke OK: cc delta1 reactivated {100 * react_pct:.2f}%, "
+          f"{st.ticks}/{scratch.totals['ticks']} ticks ==")
+
+    # pagerank rides a smaller graph (push mode needs enforce=1.0 for a
+    # CI-sized tick count) and is gated on the eps residual ball, not
+    # bitwise equality: the incremental path repairs the residual
+    # invariant rather than replaying the exact push schedule.
+    cfg_pr = _serve_cfg(11, algorithm="pagerank", enforce_fraction=1.0,
+                        max_ticks=60000)
+    srv_pr = GraphServer(cfg_pr, programs=("pagerank",))
+    srv_pr.converge()
+    n = srv_pr.graph.num_real_vertices
+    ins = [(int(rng.integers(n)), int(rng.integers(n)))]
+    t0 = time.perf_counter()
+    st = srv_pr.apply_delta(insertions=ins)["pagerank"]
+    wall = time.perf_counter() - t0
+    sess = srv_pr.sessions["pagerank"]
+    scratch = E.EngineSession(sess.cfg, graph=srv_pr.graph, prog=sess.prog)
+    scratch.tick_until_quiescent()
+    tol = n * sess.prog.push_eps / (1.0 - 0.85)
+    gap = float(np.abs(np.asarray(sess.state.values)
+                       - np.asarray(scratch.state.values)).max())
+    ok = gap <= tol
+    emit("smoke/serve/delta1_pagerank", wall * 1e6,
+         f"reactivated={st.reactivated};lag_ticks={st.ticks};"
+         f"gap={gap:.2e};tol={tol:.2e}",
+         verdict="pass" if ok else "fail", config=cfg_pr)
+    assert gap <= tol, \
+        f"smoke: pagerank delta fixpoint off by {gap:.2e} (tol {tol:.2e})"
+    print(f"== smoke OK: pagerank delta1 within eps ball "
+          f"({gap:.2e} <= {tol:.2e}) ==")
+
+
+if __name__ == "__main__":
+    bench_cli(AREA, main, smoke)

@@ -26,10 +26,11 @@ def modules() -> list:
     # ``python -m benchmarks.bench_matrix [--smoke]``
     from benchmarks import (bench_crowded, bench_evolution, bench_faults,
                             bench_kernels, bench_messages, bench_parallel,
-                            bench_priority, bench_scalability, bench_speed)
+                            bench_priority, bench_scalability, bench_serve,
+                            bench_speed)
     return [bench_speed, bench_scalability, bench_parallel, bench_faults,
             bench_crowded, bench_priority, bench_messages, bench_evolution,
-            bench_kernels]
+            bench_kernels, bench_serve]
 
 
 def main(argv=None) -> None:

@@ -270,10 +270,16 @@ def _phase1_create(prog, ep: EngineParams, values, active, cursor,
 
     # ---- create messages ----
     if push_mode:
-        # latch: a selected vertex not already mid-push (latch == 0)
-        # moves its residual into the outgoing latch and banks it into
-        # the output value — exactly once per push
-        latch = sel_valid & (pushv[sel_safe] == 0)
+        # latch: a selected vertex not already mid-push moves its
+        # residual into the outgoing latch and banks it into the output
+        # value — exactly once per push.  Mid-push means a nonzero latch
+        # OR a nonzero cursor: a zero-mass push (selected while the
+        # residual is exactly 0, e.g. restart-personalized pagerank
+        # where init activates every vertex) streams its adjacency with
+        # latch == 0, and re-latching mid-stream would resume at the
+        # cursor and ship the new mass over only the tail of the edge
+        # list, silently losing the head's share.
+        latch = sel_valid & (pushv[sel_safe] == 0) & (cur == 0)
         mass = jnp.where(latch, residual[sel_safe], pushv[sel_safe])  # [M]
         msg = jnp.broadcast_to(
             prog.combine(mass[:, None], w, deg[:, None]), (M, D))
@@ -332,9 +338,13 @@ def _phase1_create(prog, ep: EngineParams, values, active, cursor,
             jnp.where(done, 0.0, mass).astype(prog.jdtype), mode="drop")
         # a finished push retires; it re-arms iff mass accumulated while
         # the stream was in flight (receives do NOT touch the cursor in
-        # push mode, so only this site may conclude a push)
+        # push mode, so only this site may conclude a push).  abs: delta
+        # corrections (serve/graph) inject signed mass, and a negative
+        # residual must drain just like a positive one — identical for
+        # ordinary runs, whose residuals never go negative.
         active = active.at[upd_idx].set(
-            jnp.where(done, res_after > prog.push_eps, True), mode="drop")
+            jnp.where(done, jnp.abs(res_after) > prog.push_eps, True),
+            mode="drop")
         aux = jnp.stack([residual, pushv])
     else:
         active = active.at[upd_idx].set(~done, mode="drop")
@@ -384,7 +394,9 @@ def _phase2_receive_push(prog, ep: EngineParams, residual, active,
     residual = agg.scatter(residual, idx,
                            jnp.where(valid, vals, prog.identity))
     accepted = jnp.sum(valid)  # every delivered message lands mass
-    active = active | (residual > prog.push_eps)
+    # abs: signed delta-correction mass (serve/graph) activates on
+    # magnitude; no-op for ordinary runs (residuals stay non-negative)
+    active = active | (jnp.abs(residual) > prog.push_eps)
     return residual, active, accepted
 
 
@@ -983,69 +995,97 @@ def to_device_graph(graph: ShardedGraph) -> ShardGraph:
         jnp.asarray(graph.weights) if graph.weights is not None else None)
 
 
-def run_to_convergence(cfg: GraphConfig, *, graph: Optional[ShardedGraph] = None,
-                       prog=None, params: Optional[EngineParams] = None,
-                       max_ticks: Optional[int] = None,
-                       collect_log: bool = False,
-                       fault_plan=None, latency=None,
-                       schedule: Optional[str] = None):
-    """Host loop (the propagation phase). Returns (state, metrics dict).
+class EngineSession:
+    """A resumable engine run: the host-side driver behind
+    :func:`run_to_convergence`, extracted so a server can interleave
+    convergence work with query traffic (tick a few steps, answer
+    queries, tick again) and keep the run alive across streaming graph
+    deltas (``serve/graph.py``).
+
+    Holds (graph, program, params, tick builders, mode state) for one
+    schedule — plain sync, crowded (deferred-delivery ring), or async —
+    and exposes :meth:`tick_until_quiescent`.  The per-tick bookkeeping
+    order (fault recording → checkpoint cut → kill/recover → log entry →
+    convergence test) is lifted verbatim from the old inline loops;
+    :func:`run_to_convergence` is now a thin wrapper over this class and
+    must stay bit-identical to the pre-extraction behavior
+    (tests/test_session.py pins the parity).
 
     ``latency`` — a ``dist.latency.LatencyModel`` (or None to resolve one
     from ``cfg.latency_profile``) switches the run onto the crowded tick:
     messages cross the deferred-delivery ring, crowded shards get
-    throttled work budgets, and convergence additionally requires the
-    ring to drain (``totals["pending"] == 0``).  A ``fault_plan`` with
-    slowdown fields composes: the injected delays/throttles override the
-    model's for the slowdown window, without recompilation.
+    throttled work budgets, and quiescence additionally requires the
+    ring to drain.  A ``fault_plan`` with slowdown fields composes.
 
     ``schedule`` — ``"sync"`` (default; the BSP-style global tick
     barrier) or ``"async"`` (barrier-free: each shard consumes its
     delay-ring arrivals and pushes new messages on its own seeded firing
-    steps, advancing a per-shard logical clock; throttle becomes a
-    progress rate instead of a budget divisor).  ``None`` resolves from
-    ``cfg.schedule``.  Async runs always cross the delay ring (even with
-    zero latency) and converge when EVERY shard's frontier is empty AND
-    its inbound ring rows are drained.
+    steps, advancing a per-shard logical clock).  ``None`` resolves from
+    ``cfg.schedule``.  Async runs always cross the delay ring and are
+    quiescent when EVERY shard's frontier is empty AND its inbound ring
+    rows are drained.
     """
-    from repro.core import faults as faults_mod
-    from repro.dist import latency as lat_mod
 
-    graph = graph or build_sharded_graph(cfg)
-    prog = prog or prog_mod.get_program(cfg)
-    ep = params or default_params(cfg, graph, prog)
-    g = to_device_graph(graph)
-    max_ticks = cfg.max_ticks if max_ticks is None else max_ticks
+    def __init__(self, cfg: GraphConfig, *,
+                 graph: Optional[ShardedGraph] = None, prog=None,
+                 params: Optional[EngineParams] = None,
+                 collect_log: bool = False, fault_plan=None, latency=None,
+                 schedule: Optional[str] = None):
+        from repro.core import faults as faults_mod
+        from repro.dist import latency as lat_mod
+        self._faults = faults_mod
+        self.cfg = cfg
+        self.graph = graph or build_sharded_graph(cfg)
+        self.prog = prog or prog_mod.get_program(cfg)
+        self.ep = params or default_params(cfg, self.graph, self.prog)
+        self.g = to_device_graph(self.graph)
+        self.collect_log = collect_log
+        self.fault_plan = fault_plan
 
-    schedule = schedule or getattr(cfg, "schedule", "sync") or "sync"
-    if schedule not in ("sync", "async"):
-        raise ValueError(f"unknown schedule {schedule!r}; "
-                         f"valid: 'sync', 'async'")
-    if latency is None and cfg.latency_profile != "none":
-        latency = lat_mod.from_config(cfg)
-    injected = faults_mod.max_injected_delay(fault_plan)
-    crowded = latency is not None or faults_mod.injects_slowdown(fault_plan)
-    max_delay = (max(latency.max_delay if latency else 0, injected)
-                 if crowded else 0)
+        schedule = schedule or getattr(cfg, "schedule", "sync") or "sync"
+        if schedule not in ("sync", "async"):
+            raise ValueError(f"unknown schedule {schedule!r}; "
+                             f"valid: 'sync', 'async'")
+        self.schedule = schedule
+        if latency is None and cfg.latency_profile != "none":
+            latency = lat_mod.from_config(cfg)
+        self.latency = latency
+        injected = faults_mod.max_injected_delay(fault_plan)
+        self.crowded = (latency is not None
+                        or faults_mod.injects_slowdown(fault_plan))
+        self.max_delay = (max(latency.max_delay if latency else 0, injected)
+                          if self.crowded else 0)
 
-    log = []
-    totals = {"ticks": 0, "sent": 0, "accepted": 0, "fetched": 0,
-              "replayed": 0, "failures": 0, "pending": 0,
-              "schedule": schedule}
+        self.log: list = []
+        self.totals = {"ticks": 0, "sent": 0, "accepted": 0, "fetched": 0,
+                       "replayed": 0, "failures": 0, "pending": 0,
+                       "schedule": schedule}
+        self._t = 0  # host step counter (fault schedules key on it)
+        self._pending = 0
+        self._ring_ckpt = None
+        if schedule == "async":
+            self._init_async(lat_mod)
+        elif self.crowded:
+            self._init_crowded()
+        else:
+            self._init_plain()
 
-    if schedule == "async":
-        P_ = graph.num_shards
-        base_delays = (latency.delays if latency
-                       else np.zeros((P_, P_), np.int32))
-        base_throttle = (latency.throttle if latency
-                         else np.ones((P_,), np.int32))
-        inter = lat_mod.make_interleaving(
-            P_, rates=base_throttle, seed=getattr(cfg, "async_seed", 0),
+    # -- mode setup ----------------------------------------------------
+    def _init_async(self, lat_mod) -> None:
+        cfg, latency, fault_plan = self.cfg, self.latency, self.fault_plan
+        P_ = self.graph.num_shards
+        self._base_delays = (latency.delays if latency
+                             else np.zeros((P_, P_), np.int32))
+        self._base_throttle = (latency.throttle if latency
+                               else np.ones((P_,), np.int32))
+        self._inter = lat_mod.make_interleaving(
+            P_, rates=self._base_throttle,
+            seed=getattr(cfg, "async_seed", 0),
             jitter=getattr(cfg, "async_jitter", False))
         plan_rate = (fault_plan.slow_intensity
-                     if faults_mod.injects_slowdown(fault_plan) else 1)
-        max_stall = inter.stall_bound(plan_rate)
-        ring_delay = async_ring_delay(max_delay, max_stall)
+                     if self._faults.injects_slowdown(fault_plan) else 1)
+        max_stall = self._inter.stall_bound(plan_rate)
+        self._ring_delay = async_ring_delay(self.max_delay, max_stall)
         # cycle-scaled resources: one firing of a rate-k shard stands in
         # for k barrier steps, so it must carry k steps' worth of edge
         # streaming and routing room.  Compile the widened window / caps
@@ -1053,214 +1093,225 @@ def run_to_convergence(cfg: GraphConfig, *, graph: Optional[ShardedGraph] = None
         # and pass the LIVE per-shard window each step; a healthy run has
         # r_all == 1 and keeps the exact sync-shaped params, preserving
         # bit-identity with the barrier schedule.
-        r_all = max(int(np.asarray(base_throttle).max(initial=1)),
-                    plan_rate, 1)
-        ep_async = (dataclasses.replace(
-            ep, degree_window=ep.degree_window * r_all,
-            route_capacity=ep.route_capacity * r_all)
-            if r_all > 1 else ep)
-        D_base = ep.degree_window
+        self._r_all = max(int(np.asarray(self._base_throttle).max(initial=1)),
+                          plan_rate, 1)
+        self.ep_run = (dataclasses.replace(
+            self.ep, degree_window=self.ep.degree_window * self._r_all,
+            route_capacity=self.ep.route_capacity * self._r_all)
+            if self._r_all > 1 else self.ep)
+        self._D_base = self.ep.degree_window
         # replay recovery must reach back past the checkpoint by the
         # maximum link delay AND the staleness bound: a pre-checkpoint
         # send can sit due-but-unconsumed until its receiver fires
-        fault_mgr = faults_mod.FaultManager(
-            cfg, graph, prog, ep_async,
-            replay_slack=max_delay + max_stall) \
+        self.fault_mgr = self._faults.FaultManager(
+            cfg, self.graph, self.prog, self.ep_run,
+            replay_slack=self.max_delay + max_stall) \
             if fault_plan is not None else None
-        tick_fn = make_async_tick(prog, ep_async, prog.weighted)
-        astate = init_async_state(prog, ep_async, graph, ring_delay)
-        ring_ckpt = None  # (ring, demote, tick, clock) at last snapshot
-        pending = 0
-        n_active = int(jnp.sum(astate.core.active))
-        shard_busy = np.asarray(jnp.sum(astate.core.active, axis=1))
-        for t in range(max_ticks):
-            # key the interleaving (and the emulated slowdown windows) on
-            # the DEVICE tick, not the host step: a checkpoint restore
-            # rewinds core.tick, and the ring-sizing guarantee (every due
-            # row is consumed within max_stall steps of its slot being
-            # reused) only holds if the firing pattern is a pure function
-            # of device time — keyed on the host step, the pattern would
-            # shift across a restore and a due-but-unconsumed row could
-            # be overwritten, silently dropping in-flight messages
-            dev_tick = int(astate.core.tick)
-            delays, throttle = faults_mod.apply_slowdown(
-                fault_plan, dev_tick, base_delays, base_throttle)
-            fire = inter.fire_mask(dev_tick, rates=throttle)
-            window = jnp.asarray(
-                np.minimum(np.asarray(throttle, np.int64), r_all)
-                * D_base, jnp.int32)
-            astate, astats, send_bufs = tick_fn(
-                astate, g,
-                jnp.asarray(np.minimum(delays, max_delay), jnp.int32),
-                jnp.asarray(fire), window)
-            stats = astats.base
-            n_active = int(stats.active)
-            pending = int(astats.pending)
-            shard_busy = (np.asarray(astats.shard_active)
-                          + np.asarray(astats.shard_pending))
-            totals["ticks"] += 1
-            totals["sent"] += int(stats.sent)
-            totals["accepted"] += int(stats.accepted)
-            totals["fetched"] += int(stats.fetched)
-            if fault_mgr is not None:
-                fault_mgr.record(t, astate.core, send_bufs,
-                                 clock=astate.clock)
-                if (fault_mgr.recovery == "checkpoint"
-                        and t % fault_mgr.ckpt_every == 0):
-                    # the consistent cut under per-shard clocks is no
-                    # longer "same logical tick everywhere" — it is the
-                    # snapshot instant's (state, ring, wall-clock step,
-                    # clock VECTOR): the ring carries every in-flight
-                    # message and the clock vector records how far each
-                    # shard had advanced
-                    ring_ckpt = (astate.ring, astate.demote,
-                                 astate.core.tick, astate.clock)
-                core, extra = fault_mgr.maybe_fail(
-                    t, astate.core, fault_plan, clock=astate.clock)
-                astate = astate._replace(core=core)
-                if extra.get("clock") is not None:
-                    astate = astate._replace(clock=extra["clock"])
-                if (extra.get("failures")
-                        and fault_mgr.recovery == "checkpoint"):
-                    if ring_ckpt is not None:
-                        ring, demote, snap_tick, snap_clock = ring_ckpt
-                        astate = AsyncState(core._replace(tick=snap_tick),
-                                            ring, demote, snap_clock)
-                    else:  # no snapshot yet -> run re-inits: empty ring
-                        astate = init_async_state(
-                            prog, ep_async, graph, ring_delay)._replace(
-                            core=core._replace(
-                                tick=jnp.zeros((), jnp.int32)))
-                    pending = int(jnp.sum(
-                        (astate.ring.ids >= 0)
-                        & (astate.ring.due >= 0)[..., None]))
-                totals["replayed"] += extra.get("replayed", 0)
-                totals["failures"] += extra.get("failures", 0)
-                if extra.get("failures"):
-                    n_active = int(jnp.sum(astate.core.active))
-                    shard_busy = (
-                        np.asarray(jnp.sum(astate.core.active, axis=1))
-                        + np.asarray(jnp.sum(
-                            (astate.ring.ids >= 0)
-                            & (astate.ring.due >= 0)[..., None],
-                            axis=(0, 1, 3))))
-            if collect_log:
-                log.append({
-                    "tick": t, "active": n_active,
-                    "sent": int(stats.sent),
-                    "accepted": int(stats.accepted),
-                    "fetched": int(stats.fetched), "pending": pending,
-                    "fired": np.asarray(fire).astype(int).tolist(),
-                    "clock": np.asarray(astate.clock).tolist(),
-                    "shard_active": np.asarray(
-                        astats.shard_active).tolist(),
-                    "shard_pending": np.asarray(
-                        astats.shard_pending).tolist()})
-            # per-shard convergence: EVERY shard must have an empty
-            # frontier AND a drained inbound ring (a global barrier-free
-            # run has no "same tick everywhere" instant to test at)
-            if int(shard_busy.max(initial=0)) == 0:
-                break
-        totals["pending"] = pending
-        totals["converged"] = int(shard_busy.max(initial=0)) == 0
-        totals["clock"] = np.asarray(astate.clock).tolist()
-        totals["log"] = log
-        return astate.core, totals
+        self._tick_fn = make_async_tick(self.prog, self.ep_run,
+                                        self.prog.weighted)
+        self._astate = init_async_state(self.prog, self.ep_run, self.graph,
+                                        self._ring_delay)
+        self._n_active = int(jnp.sum(self._astate.core.active))
+        self._shard_busy = np.asarray(
+            jnp.sum(self._astate.core.active, axis=1))
 
-    # replay recovery must reach back past the checkpoint by the maximum
-    # link delay: deferred messages straddling the snapshot are otherwise
-    # in neither the restored state nor the replayed range
-    fault_mgr = faults_mod.FaultManager(cfg, graph, prog, ep,
-                                        replay_slack=max_delay) \
-        if fault_plan is not None else None
+    def _init_sync_fault_mgr(self) -> None:
+        # replay recovery must reach back past the checkpoint by the
+        # maximum link delay: deferred messages straddling the snapshot
+        # are otherwise in neither the restored state nor the replayed
+        # range
+        self.fault_mgr = self._faults.FaultManager(
+            self.cfg, self.graph, self.prog, self.ep,
+            replay_slack=self.max_delay) \
+            if self.fault_plan is not None else None
 
-    # NOTE: the crowded and plain loops below mirror each other's
-    # per-tick bookkeeping (totals, log entries, fault handling, the
-    # convergence break) — keep changes to one in sync with the other
-    if crowded:
-        P_ = graph.num_shards
-        base_delays = (latency.delays if latency
-                       else np.zeros((P_, P_), np.int32))
-        base_throttle = (latency.throttle if latency
-                         else np.ones((P_,), np.int32))
-        tick_fn = make_crowded_tick(prog, ep, prog.weighted)
-        cstate = init_crowded_state(prog, ep, graph, max_delay)
-        ring_ckpt = None  # (ring, demote, tick) at the last snapshot
-        pending = 0
-        n_active = int(jnp.sum(cstate.core.active))
-        for t in range(max_ticks):
-            delays, throttle = faults_mod.apply_slowdown(
-                fault_plan, t, base_delays, base_throttle)
-            cstate, cstats, send_bufs = tick_fn(
-                cstate, g, jnp.asarray(np.minimum(delays, max_delay),
-                                       jnp.int32),
-                jnp.asarray(throttle, jnp.int32))
-            stats = cstats.base
-            n_active = int(stats.active)
-            pending = int(cstats.pending)
-            totals["ticks"] += 1
-            totals["sent"] += int(stats.sent)
-            totals["accepted"] += int(stats.accepted)
-            totals["fetched"] += int(stats.fetched)
-            if fault_mgr is not None:
-                fault_mgr.record(t, cstate.core, send_bufs)
-                if (fault_mgr.recovery == "checkpoint"
-                        and t % fault_mgr.ckpt_every == 0):
-                    # checkpoint-restore recovery rolls EVERY shard back
-                    # to the snapshot; with a delay ring the snapshot's
-                    # consistent cut must include the in-flight messages
-                    # (their senders' cursors have already advanced, so
-                    # they would never be re-sent) AND the device tick
-                    # (ring slots are keyed by tick % ring_len — resumed
-                    # pushes must reuse the original numbering or they
-                    # would collide with restored in-flight slots)
-                    ring_ckpt = (cstate.ring, cstate.demote,
-                                 cstate.core.tick)
-                core, extra = fault_mgr.maybe_fail(t, cstate.core,
-                                                   fault_plan)
-                cstate = cstate._replace(core=core)
-                if extra.get("failures") and fault_mgr.recovery == "checkpoint":
-                    if ring_ckpt is not None:
-                        ring, demote, snap_tick = ring_ckpt
-                        cstate = CrowdedState(core._replace(tick=snap_tick),
-                                              ring, demote)
-                    else:  # no snapshot yet -> run re-inits: empty ring
-                        cstate = init_crowded_state(
-                            prog, ep, graph, max_delay)._replace(
-                            core=core._replace(
-                                tick=jnp.zeros((), jnp.int32)))
-                    pending = int(jnp.sum(
-                        (cstate.ring.ids >= 0)
-                        & (cstate.ring.due >= 0)[..., None]))
-                totals["replayed"] += extra.get("replayed", 0)
-                totals["failures"] += extra.get("failures", 0)
-                if extra.get("failures"):
-                    n_active = int(jnp.sum(cstate.core.active))
-            if collect_log:
-                log.append({
-                    "tick": t, "active": n_active,
-                    "sent": int(stats.sent),
-                    "accepted": int(stats.accepted),
-                    "fetched": int(stats.fetched), "pending": pending,
-                    "shard_work": (np.asarray(cstats.shard_fetched)
-                                   + np.asarray(cstats.shard_recv)
-                                   ).tolist()})
-            if n_active == 0 and pending == 0:
-                break
-        totals["pending"] = pending
-        totals["converged"] = n_active == 0 and pending == 0
-        totals["log"] = log
-        return cstate.core, totals
+    def _init_crowded(self) -> None:
+        latency = self.latency
+        P_ = self.graph.num_shards
+        self._init_sync_fault_mgr()
+        self.ep_run = self.ep
+        self._base_delays = (latency.delays if latency
+                             else np.zeros((P_, P_), np.int32))
+        self._base_throttle = (latency.throttle if latency
+                               else np.ones((P_,), np.int32))
+        self._tick_fn = make_crowded_tick(self.prog, self.ep,
+                                          self.prog.weighted)
+        self._cstate = init_crowded_state(self.prog, self.ep, self.graph,
+                                          self.max_delay)
+        self._n_active = int(jnp.sum(self._cstate.core.active))
 
-    tick_fn = make_local_tick(prog, ep, prog.weighted)
-    state = init_state(prog, graph)
+    def _init_plain(self) -> None:
+        self._init_sync_fault_mgr()
+        self.ep_run = self.ep
+        self._tick_fn = make_local_tick(self.prog, self.ep,
+                                        self.prog.weighted)
+        # a zero-budget run (or an initially empty frontier) must still
+        # report a well-defined activity count
+        self._state = init_state(self.prog, self.graph)
+        self._n_active = int(jnp.sum(self._state.active))
 
-    # max_ticks == 0 (or an initially empty frontier) must still report a
-    # well-defined activity count after the loop
-    n_active = int(jnp.sum(state.active))
-    for t in range(max_ticks):
-        state, stats, send_bufs = tick_fn(state, g)
+    # -- per-tick drivers (bookkeeping order mirrors across all three:
+    # totals, fault handling, log entry — keep changes in sync) --------
+    def _step_async(self) -> None:
+        t, fault_plan, fault_mgr = self._t, self.fault_plan, self.fault_mgr
+        # key the interleaving (and the emulated slowdown windows) on
+        # the DEVICE tick, not the host step: a checkpoint restore
+        # rewinds core.tick, and the ring-sizing guarantee (every due
+        # row is consumed within max_stall steps of its slot being
+        # reused) only holds if the firing pattern is a pure function
+        # of device time — keyed on the host step, the pattern would
+        # shift across a restore and a due-but-unconsumed row could
+        # be overwritten, silently dropping in-flight messages
+        dev_tick = int(self._astate.core.tick)
+        delays, throttle = self._faults.apply_slowdown(
+            fault_plan, dev_tick, self._base_delays, self._base_throttle)
+        fire = self._inter.fire_mask(dev_tick, rates=throttle)
+        window = jnp.asarray(
+            np.minimum(np.asarray(throttle, np.int64), self._r_all)
+            * self._D_base, jnp.int32)
+        astate, astats, send_bufs = self._tick_fn(
+            self._astate, self.g,
+            jnp.asarray(np.minimum(delays, self.max_delay), jnp.int32),
+            jnp.asarray(fire), window)
+        stats = astats.base
         n_active = int(stats.active)
+        pending = int(astats.pending)
+        shard_busy = (np.asarray(astats.shard_active)
+                      + np.asarray(astats.shard_pending))
+        totals = self.totals
+        totals["ticks"] += 1
+        totals["sent"] += int(stats.sent)
+        totals["accepted"] += int(stats.accepted)
+        totals["fetched"] += int(stats.fetched)
+        if fault_mgr is not None:
+            fault_mgr.record(t, astate.core, send_bufs,
+                             clock=astate.clock)
+            if (fault_mgr.recovery == "checkpoint"
+                    and t % fault_mgr.ckpt_every == 0):
+                # the consistent cut under per-shard clocks is no
+                # longer "same logical tick everywhere" — it is the
+                # snapshot instant's (state, ring, wall-clock step,
+                # clock VECTOR): the ring carries every in-flight
+                # message and the clock vector records how far each
+                # shard had advanced
+                self._ring_ckpt = (astate.ring, astate.demote,
+                                   astate.core.tick, astate.clock)
+            core, extra = fault_mgr.maybe_fail(
+                t, astate.core, fault_plan, clock=astate.clock)
+            astate = astate._replace(core=core)
+            if extra.get("clock") is not None:
+                astate = astate._replace(clock=extra["clock"])
+            if (extra.get("failures")
+                    and fault_mgr.recovery == "checkpoint"):
+                if self._ring_ckpt is not None:
+                    ring, demote, snap_tick, snap_clock = self._ring_ckpt
+                    astate = AsyncState(core._replace(tick=snap_tick),
+                                        ring, demote, snap_clock)
+                else:  # no snapshot yet -> run re-inits: empty ring
+                    astate = init_async_state(
+                        self.prog, self.ep_run, self.graph,
+                        self._ring_delay)._replace(
+                        core=core._replace(
+                            tick=jnp.zeros((), jnp.int32)))
+                pending = int(jnp.sum(
+                    (astate.ring.ids >= 0)
+                    & (astate.ring.due >= 0)[..., None]))
+            totals["replayed"] += extra.get("replayed", 0)
+            totals["failures"] += extra.get("failures", 0)
+            if extra.get("failures"):
+                n_active = int(jnp.sum(astate.core.active))
+                shard_busy = (
+                    np.asarray(jnp.sum(astate.core.active, axis=1))
+                    + np.asarray(jnp.sum(
+                        (astate.ring.ids >= 0)
+                        & (astate.ring.due >= 0)[..., None],
+                        axis=(0, 1, 3))))
+        if self.collect_log:
+            self.log.append({
+                "tick": t, "active": n_active,
+                "sent": int(stats.sent),
+                "accepted": int(stats.accepted),
+                "fetched": int(stats.fetched), "pending": pending,
+                "fired": np.asarray(fire).astype(int).tolist(),
+                "clock": np.asarray(astate.clock).tolist(),
+                "shard_active": np.asarray(
+                    astats.shard_active).tolist(),
+                "shard_pending": np.asarray(
+                    astats.shard_pending).tolist()})
+        self._astate = astate
+        self._n_active = n_active
+        self._pending = pending
+        self._shard_busy = shard_busy
+
+    def _step_crowded(self) -> None:
+        t, fault_plan, fault_mgr = self._t, self.fault_plan, self.fault_mgr
+        delays, throttle = self._faults.apply_slowdown(
+            fault_plan, t, self._base_delays, self._base_throttle)
+        cstate, cstats, send_bufs = self._tick_fn(
+            self._cstate, self.g,
+            jnp.asarray(np.minimum(delays, self.max_delay), jnp.int32),
+            jnp.asarray(throttle, jnp.int32))
+        stats = cstats.base
+        n_active = int(stats.active)
+        pending = int(cstats.pending)
+        totals = self.totals
+        totals["ticks"] += 1
+        totals["sent"] += int(stats.sent)
+        totals["accepted"] += int(stats.accepted)
+        totals["fetched"] += int(stats.fetched)
+        if fault_mgr is not None:
+            fault_mgr.record(t, cstate.core, send_bufs)
+            if (fault_mgr.recovery == "checkpoint"
+                    and t % fault_mgr.ckpt_every == 0):
+                # checkpoint-restore recovery rolls EVERY shard back
+                # to the snapshot; with a delay ring the snapshot's
+                # consistent cut must include the in-flight messages
+                # (their senders' cursors have already advanced, so
+                # they would never be re-sent) AND the device tick
+                # (ring slots are keyed by tick % ring_len — resumed
+                # pushes must reuse the original numbering or they
+                # would collide with restored in-flight slots)
+                self._ring_ckpt = (cstate.ring, cstate.demote,
+                                   cstate.core.tick)
+            core, extra = fault_mgr.maybe_fail(t, cstate.core,
+                                               fault_plan)
+            cstate = cstate._replace(core=core)
+            if extra.get("failures") and fault_mgr.recovery == "checkpoint":
+                if self._ring_ckpt is not None:
+                    ring, demote, snap_tick = self._ring_ckpt
+                    cstate = CrowdedState(core._replace(tick=snap_tick),
+                                          ring, demote)
+                else:  # no snapshot yet -> run re-inits: empty ring
+                    cstate = init_crowded_state(
+                        self.prog, self.ep, self.graph,
+                        self.max_delay)._replace(
+                        core=core._replace(
+                            tick=jnp.zeros((), jnp.int32)))
+                pending = int(jnp.sum(
+                    (cstate.ring.ids >= 0)
+                    & (cstate.ring.due >= 0)[..., None]))
+            totals["replayed"] += extra.get("replayed", 0)
+            totals["failures"] += extra.get("failures", 0)
+            if extra.get("failures"):
+                n_active = int(jnp.sum(cstate.core.active))
+        if self.collect_log:
+            self.log.append({
+                "tick": t, "active": n_active,
+                "sent": int(stats.sent),
+                "accepted": int(stats.accepted),
+                "fetched": int(stats.fetched), "pending": pending,
+                "shard_work": (np.asarray(cstats.shard_fetched)
+                               + np.asarray(cstats.shard_recv)
+                               ).tolist()})
+        self._cstate = cstate
+        self._n_active = n_active
+        self._pending = pending
+
+    def _step_plain(self) -> None:
+        t, fault_plan, fault_mgr = self._t, self.fault_plan, self.fault_mgr
+        state, stats, send_bufs = self._tick_fn(self._state, self.g)
+        n_active = int(stats.active)
+        totals = self.totals
         totals["ticks"] += 1
         totals["sent"] += int(stats.sent)
         totals["accepted"] += int(stats.accepted)
@@ -1272,16 +1323,152 @@ def run_to_convergence(cfg: GraphConfig, *, graph: Optional[ShardedGraph] = None
             totals["failures"] += extra.get("failures", 0)
             if extra.get("failures"):
                 n_active = int(jnp.sum(state.active))
-        if collect_log:
-            log.append({"tick": t, "active": n_active,
-                        "sent": int(stats.sent),
-                        "accepted": int(stats.accepted),
-                        "fetched": int(stats.fetched)})
-        if n_active == 0:
-            break
-    totals["converged"] = n_active == 0
-    totals["log"] = log
-    return state, totals
+        if self.collect_log:
+            self.log.append({"tick": t, "active": n_active,
+                             "sent": int(stats.sent),
+                             "accepted": int(stats.accepted),
+                             "fetched": int(stats.fetched)})
+        self._state = state
+        self._n_active = n_active
+
+    # -- public surface ------------------------------------------------
+    @property
+    def state(self) -> EngineState:
+        """The core engine state (ring/clock planes stay internal)."""
+        if self.schedule == "async":
+            return self._astate.core
+        if self.crowded:
+            return self._cstate.core
+        return self._state
+
+    @property
+    def quiescent(self) -> bool:
+        """No frontier anywhere and (ring modes) all deliveries drained.
+
+        Async quiescence is per-shard: EVERY shard must have an empty
+        frontier AND a drained inbound ring (a barrier-free run has no
+        "same tick everywhere" instant to test at)."""
+        if self.schedule == "async":
+            return int(self._shard_busy.max(initial=0)) == 0
+        if self.crowded:
+            return self._n_active == 0 and self._pending == 0
+        return self._n_active == 0
+
+    def step(self) -> None:
+        """Run exactly one engine tick (plus its fault bookkeeping)."""
+        if self.schedule == "async":
+            self._step_async()
+        elif self.crowded:
+            self._step_crowded()
+        else:
+            self._step_plain()
+        self._t += 1
+
+    def tick_until_quiescent(self, budget: Optional[int] = None) -> dict:
+        """Tick until quiescent or ``budget`` ticks elapse; returns the
+        cumulative totals snapshot.  ``None`` -> ``cfg.max_ticks``.
+
+        Parity note: the very first call always runs at least one tick
+        even on an initially-empty frontier (the pre-extraction loop had
+        no pre-loop convergence test); later calls on a quiescent
+        session return immediately, so a server can poll for free."""
+        budget = self.cfg.max_ticks if budget is None else budget
+        for _ in range(budget):
+            if self.totals["ticks"] > 0 and self.quiescent:
+                break
+            self.step()
+            if self.quiescent:
+                break
+        return self.totals_snapshot()
+
+    def totals_snapshot(self) -> dict:
+        """The metrics dict ``run_to_convergence`` has always returned."""
+        out = dict(self.totals)
+        if self.schedule == "async":
+            out["pending"] = self._pending
+            out["converged"] = self.quiescent
+            out["clock"] = np.asarray(self._astate.clock).tolist()
+            out["log"] = self.log
+            return out
+        if self.crowded:
+            out["pending"] = self._pending
+        out["converged"] = self.quiescent
+        out["log"] = self.log
+        return out
+
+    # -- streaming-delta hooks (serve/graph.py) ------------------------
+    def replace_state(self, core: EngineState) -> None:
+        """Swap the core engine state (host-side delta seeding) and
+        refresh the activity counters.  The ring / demotion / clock
+        planes of the crowded and async wrappers are preserved — deltas
+        are applied at quiescence, when the rings are drained."""
+        self._n_active = int(jnp.sum(core.active))
+        if self.schedule == "async":
+            self._astate = self._astate._replace(core=core)
+            self._shard_busy = (
+                np.asarray(jnp.sum(core.active, axis=1))
+                + np.asarray(jnp.sum(
+                    (self._astate.ring.ids >= 0)
+                    & (self._astate.ring.due >= 0)[..., None],
+                    axis=(0, 1, 3))))
+        elif self.crowded:
+            self._cstate = self._cstate._replace(core=core)
+        else:
+            self._state = core
+
+    def rebind_graph(self, graph: ShardedGraph) -> None:
+        """Point the session at a patched graph (streaming delta).  The
+        jitted tick retraces automatically if the padded edge width
+        changed; EngineParams stay as derived for the original graph, so
+        route capacity keeps its head-room across small deltas."""
+        self.graph = graph
+        self.g = to_device_graph(graph)
+        if self.fault_mgr is not None:
+            self.fault_mgr.graph = graph
+
+    def rebase_recovery(self) -> None:
+        """Make the CURRENT state the recovery floor (call right after a
+        delta is seeded): pre-delta snapshots and logged messages were
+        derived on the old graph — restoring or replaying them would
+        resurrect stale values and silently diverge from the patched
+        graph's fixpoint.  Checkpoint-restore recovery additionally
+        re-cuts its ring snapshot at this instant."""
+        if self.fault_mgr is None:
+            return
+        if self.schedule == "async":
+            self.fault_mgr.rebase(self._t, self._astate.core,
+                                  clock=self._astate.clock,
+                                  graph=self.graph)
+            self._ring_ckpt = (self._astate.ring, self._astate.demote,
+                               self._astate.core.tick, self._astate.clock)
+        elif self.crowded:
+            self.fault_mgr.rebase(self._t, self._cstate.core,
+                                  graph=self.graph)
+            self._ring_ckpt = (self._cstate.ring, self._cstate.demote,
+                               self._cstate.core.tick)
+        else:
+            self.fault_mgr.rebase(self._t, self._state, graph=self.graph)
+
+
+def run_to_convergence(cfg: GraphConfig, *, graph: Optional[ShardedGraph] = None,
+                       prog=None, params: Optional[EngineParams] = None,
+                       max_ticks: Optional[int] = None,
+                       collect_log: bool = False,
+                       fault_plan=None, latency=None,
+                       schedule: Optional[str] = None):
+    """Host loop (the propagation phase). Returns (state, metrics dict).
+
+    Thin wrapper over :class:`EngineSession` — construct a session, tick
+    it to quiescence, return ``(state, totals)``.  See the session class
+    for the ``latency`` / ``schedule`` semantics; behavior (including
+    every per-tick side effect) is identical to the old inline loops.
+    """
+    session = EngineSession(cfg, graph=graph, prog=prog, params=params,
+                            collect_log=collect_log, fault_plan=fault_plan,
+                            latency=latency, schedule=schedule)
+    totals = session.tick_until_quiescent(
+        cfg.max_ticks if max_ticks is None else max_ticks)
+    return session.state, totals
 
 
 # ======================================================================

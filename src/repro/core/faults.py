@@ -201,6 +201,37 @@ class FaultManager:
                     del self.msg_log[old]
 
     # ------------------------------------------------------------------
+    def rebase(self, t: int, state: EngineState, clock=None,
+               graph=None) -> None:
+        """Re-anchor recovery at the CURRENT state (streaming deltas).
+
+        A graph delta invalidates everything recorded before it: logged
+        outgoing buffers carry values derived over edges that may no
+        longer exist (replaying them would re-poison a targeted reset),
+        and older snapshots predate the patched CSR (restoring one would
+        resurrect pre-delta state and converge on the wrong graph).
+        ``EngineSession.rebase_recovery`` calls this right after the
+        delta frontier is seeded: the post-delta state becomes every
+        shard's snapshot, the message log is cleared (a kill inside the
+        slack window now takes the boundary fallback, which is correct
+        by self-stabilization on the NEW graph), and the boundary maps
+        are re-pointed at the patched graph."""
+        if graph is not None:
+            self.graph = graph
+        self.msg_log.clear()
+        vals = np.asarray(state.values)
+        act = np.asarray(state.active)
+        cur = np.asarray(state.cursor)
+        aux = np.asarray(state.aux) if state.aux is not None else None
+        cl = np.asarray(clock) if clock is not None else None
+        for p in range(self.graph.num_shards):
+            self.ckpt[p] = (vals[p].copy(), act[p].copy(), cur[p].copy(),
+                            aux[p].copy() if aux is not None else None)
+            self.ckpt_tick[p] = t
+            if cl is not None:
+                self.ckpt_clock[p] = int(cl[p])
+
+    # ------------------------------------------------------------------
     def maybe_fail(self, t: int, state: EngineState, plan: FaultPlan,
                    clock=None):
         """``clock`` (async runs): the current per-shard logical clock

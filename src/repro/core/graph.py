@@ -9,7 +9,7 @@ for the fault-recovery fallback path (DESIGN.md C3).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import numpy as np
 
@@ -107,37 +107,25 @@ def generate_edges(cfg: GraphConfig) -> np.ndarray:
 
 
 # ======================================================================
-def build_sharded_graph(cfg: GraphConfig,
-                        edges: Optional[np.ndarray] = None,
-                        symmetrize: bool = True) -> ShardedGraph:
-    """Edge list -> P-way padded CSR (+ reverse edges for undirected algos)."""
-    P = cfg.num_shards
-    if edges is None:
-        edges = generate_edges(cfg)
-    n = int(cfg.num_vertices)
-    if symmetrize:
-        edges = np.concatenate([edges, edges[:, ::-1]], axis=0)
-    # drop self-loops, dedup
-    edges = edges[edges[:, 0] != edges[:, 1]]
-    edges = np.unique(edges, axis=0)
+def _assemble_csr(n: int, P: int, src: np.ndarray, dst: np.ndarray,
+                  w_all: Optional[np.ndarray]) -> ShardedGraph:
+    """Sorted directed edge arrays -> P-way padded CSR.  ``src``/``dst``
+    (and ``w_all``, row-aligned) must already be lexsorted by (src, dst)
+    with self-loops dropped — the one shared assembly for the generator
+    path (:func:`build_sharded_graph`) and the streaming-delta patch
+    (:func:`apply_edge_delta`), so both produce byte-identical layouts
+    for the same edge set."""
     part = vertex_partition(n, P)  # the engine's shard rule (dist/sharding)
     vs = part.vs
     n_pad = part.padded_vertices
-
-    src, dst = edges[:, 0], edges[:, 1]
     shard = part.shard_of(src)
-    order = np.lexsort((dst, src))
-    src, dst, shard = src[order], dst[order], shard[order]
 
     counts = np.bincount(shard, minlength=P)
     es = max(int(counts.max()), 1)
     row_ptr = np.zeros((P, vs + 1), dtype=np.int64)
     col_idx = np.full((P, es), -1, dtype=np.int64)
-    weights = None
-    if cfg.weighted:
-        rng = np.random.default_rng(cfg.seed + 7)
-        w_all = rng.uniform(0.1, 1.0, size=len(src)).astype(np.float32)
-        weights = np.zeros((P, es), dtype=np.float32)
+    weights = (np.zeros((P, es), dtype=np.float32)
+               if w_all is not None else None)
 
     start = 0
     for p in range(P):
@@ -162,6 +150,160 @@ def build_sharded_graph(cfg: GraphConfig,
         num_vertices=n_pad, num_real_vertices=n, num_edges=len(src),
         num_shards=P, vs=vs, row_ptr=row_ptr, col_idx=col_idx,
         weights=weights, edge_counts=counts, boundary=boundary)
+
+
+def build_sharded_graph(cfg: GraphConfig,
+                        edges: Optional[np.ndarray] = None,
+                        symmetrize: bool = True) -> ShardedGraph:
+    """Edge list -> P-way padded CSR (+ reverse edges for undirected algos)."""
+    P = cfg.num_shards
+    if edges is None:
+        edges = generate_edges(cfg)
+    n = int(cfg.num_vertices)
+    if symmetrize:
+        edges = np.concatenate([edges, edges[:, ::-1]], axis=0)
+    # drop self-loops, dedup
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    edges = np.unique(edges, axis=0)
+
+    src, dst = edges[:, 0], edges[:, 1]
+    order = np.lexsort((dst, src))
+    src, dst = src[order], dst[order]
+    w_all = None
+    if cfg.weighted:
+        rng = np.random.default_rng(cfg.seed + 7)
+        w_all = rng.uniform(0.1, 1.0, size=len(src)).astype(np.float32)
+    return _assemble_csr(n, P, src, dst, w_all)
+
+
+# ======================================================================
+# Streaming edge deltas (the serving plane's mutation path)
+# ======================================================================
+def edge_list(graph: ShardedGraph, with_weights: bool = False):
+    """Recover the exact directed edge list (lexsorted by (src, dst))
+    from a sharded CSR — the inverse of :func:`_assemble_csr`.  Returns
+    ``edges [E, 2]`` (or ``(edges, weights)``): the input to oracles and
+    to :func:`apply_edge_delta`."""
+    srcs, dsts, ws = [], [], []
+    for p in range(graph.num_shards):
+        cnt = int(graph.edge_counts[p])
+        deg = (graph.row_ptr[p, 1:] - graph.row_ptr[p, :-1]).astype(np.int64)
+        srcs.append(p * graph.vs + np.repeat(np.arange(graph.vs), deg))
+        dsts.append(graph.col_idx[p, :cnt])
+        if with_weights and graph.weights is not None:
+            ws.append(graph.weights[p, :cnt])
+    edges = np.stack([np.concatenate(srcs), np.concatenate(dsts)],
+                     axis=1).astype(np.int64)
+    if with_weights:
+        return edges, (np.concatenate(ws).astype(np.float32)
+                       if ws else np.ones(len(edges), np.float32))
+    return edges
+
+
+class EdgeDelta(NamedTuple):
+    """What :func:`apply_edge_delta` actually changed (directed,
+    post-symmetrization, deduplicated against the existing edge set)."""
+    inserted: np.ndarray  # [ki, 2] directed edges added
+    deleted: np.ndarray  # [kd, 2] directed edges removed
+    endpoints: np.ndarray  # unique vertex ids touched by either
+
+
+def _canonical_pairs(pairs) -> np.ndarray:
+    pairs = np.asarray(list(pairs), np.int64).reshape(-1, 2)
+    if len(pairs):
+        pairs = np.concatenate([pairs, pairs[:, ::-1]], axis=0)
+        pairs = pairs[pairs[:, 0] != pairs[:, 1]]
+        pairs = np.unique(pairs, axis=0)
+    return pairs
+
+
+def apply_edge_delta(graph: ShardedGraph, insertions=(), deletions=(),
+                     *, insert_weights: Optional[np.ndarray] = None,
+                     seed: int = 0) -> tuple[ShardedGraph, EdgeDelta]:
+    """Patch the sharded CSR with a streaming delta.
+
+    ``insertions`` / ``deletions`` are undirected vertex pairs; both are
+    symmetrized and self-loops dropped, matching the builder's
+    canonicalization, so the result is byte-identical to rebuilding from
+    the patched edge list.  Deletions of absent edges and insertions of
+    present ones are silently skipped (``EdgeDelta`` reports what
+    actually changed).  An edge in BOTH lists ends up present (delete,
+    then insert).  Weighted graphs carry every surviving edge's weight
+    through unchanged; inserted directed edges draw fresh seeded weights
+    (the builder's per-direction independent draw) unless
+    ``insert_weights`` supplies one per canonical inserted edge.
+
+    The padded per-shard width ``es`` is recomputed, so a session
+    re-bound to the patch retraces its tick only when the max per-shard
+    edge count actually changes.
+    """
+    n, P = graph.num_real_vertices, graph.num_shards
+    if graph.weights is not None:
+        edges, w = edge_list(graph, with_weights=True)
+    else:
+        edges, w = edge_list(graph), None
+    ins = _canonical_pairs(insertions)
+    dele = _canonical_pairs(deletions)
+    if (len(ins) and int(ins.max()) >= n) or \
+            (len(dele) and int(dele.max()) >= n):
+        raise ValueError("delta touches vertex ids outside the graph")
+
+    stride = np.int64(graph.num_vertices)
+    key = lambda e: e[:, 0] * stride + e[:, 1]  # noqa: E731
+    ek = key(edges)
+    del_mask = (np.isin(ek, key(dele)) if len(dele)
+                else np.zeros(len(ek), bool))
+    deleted = edges[del_mask]
+    keep = edges[~del_mask]
+    w_keep = w[~del_mask] if w is not None else None
+
+    if len(ins):
+        fresh = ~np.isin(key(ins), key(keep))
+        ins_new = ins[fresh]
+    else:
+        fresh = np.zeros(0, bool)
+        ins_new = ins
+    new_edges = np.concatenate([keep, ins_new], axis=0)
+    w_new = None
+    if w is not None:
+        if insert_weights is not None:
+            iw = np.asarray(insert_weights, np.float32)[fresh]
+        else:
+            rng = np.random.default_rng(seed)
+            iw = rng.uniform(0.1, 1.0, size=len(ins_new)).astype(np.float32)
+        w_new = np.concatenate([w_keep, iw])
+
+    order = np.lexsort((new_edges[:, 1], new_edges[:, 0]))
+    new_graph = _assemble_csr(n, P, new_edges[order, 0], new_edges[order, 1],
+                              w_new[order] if w_new is not None else None)
+    touched = (np.unique(np.concatenate([ins_new.ravel(), deleted.ravel()]))
+               if len(ins_new) + len(deleted)
+               else np.zeros(0, np.int64))
+    return new_graph, EdgeDelta(ins_new, deleted, touched)
+
+
+def normalize_weights(graph: ShardedGraph) -> ShardedGraph:
+    """Per-source transition normalization for weighted pagerank: every
+    edge weight becomes ``w_e / strength(src)`` (strength = summed
+    outgoing weight), so a push through ``combine(mass, w, deg) =
+    d·mass·w`` distributes exactly ``d·mass`` over the out-edges — the
+    weighted analogue of the uniform ``d·mass/deg`` split, preserving
+    the exactly-once mass invariant.  Unweighted graphs get uniform
+    ``1/deg`` transition weights (bit-identical mass flow to the
+    unweighted combine)."""
+    P, vs, es = graph.num_shards, graph.vs, graph.es
+    out = np.zeros((P, es), dtype=np.float32)
+    for p in range(P):
+        cnt = int(graph.edge_counts[p])
+        deg = (graph.row_ptr[p, 1:] - graph.row_ptr[p, :-1]).astype(np.int64)
+        src_local = np.repeat(np.arange(vs), deg)
+        we = (graph.weights[p, :cnt] if graph.weights is not None
+              else np.ones(cnt, np.float32))
+        strength = np.zeros(vs, np.float64)
+        np.add.at(strength, src_local, we.astype(np.float64))
+        out[p, :cnt] = (we / np.maximum(strength[src_local], 1e-30)
+                        ).astype(np.float32)
+    return dataclasses.replace(graph, weights=out)
 
 
 # ======================================================================

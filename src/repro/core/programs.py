@@ -218,7 +218,9 @@ def labelprop() -> VertexProgram:
                          priority_value)
 
 
-def pagerank(damping: float = 0.85, push_eps: float = 1e-5) -> VertexProgram:
+def pagerank(damping: float = 0.85, push_eps: float = 1e-5,
+             restart: Optional[int] = None,
+             weighted: bool = False) -> VertexProgram:
     """Residual-push PageRank (GraphLab-style accumulation): the paper's
     §3.3 caveat made executable — the first genuinely non-idempotent
     program, exercising the checkpoint-restore recovery path for real.
@@ -245,6 +247,20 @@ def pagerank(damping: float = 0.85, push_eps: float = 1e-5) -> VertexProgram:
     NOT self-stabilizing: duplicated delivery double-counts, so replay
     recovery is refused (globally consistent checkpoint restore instead)
     and lossy wire modes gate to "none".
+
+    ``restart`` — a personalized restart vertex: the teleport vector
+    becomes ``e_restart`` instead of uniform, i.e. the seed residual is
+    ``(1-d)`` at the restart vertex and zero elsewhere.  Solves the
+    unnormalized PPR system ``p = (1-d)·e_v + d·P^T p`` (``Σp = 1 -
+    leak``); ``serve/graph.py`` builds ``top_k_near(v)`` on it.
+
+    ``weighted`` — weighted-degree normalization through the
+    ``combine(mass, w, deg)`` seam: a push distributes its mass
+    proportionally to *transition* weights.  The engine hands combine
+    raw edge weights, so callers must pre-normalize them per source
+    vertex (``core.graph.normalize_weights``: ``w_e / strength(src)``) —
+    combine then sends ``d·m·w_e`` and the per-vertex outflow still sums
+    to ``d·m``, preserving the exactly-once mass invariant.
     """
 
     def init(global_ids, valid):
@@ -252,12 +268,19 @@ def pagerank(damping: float = 0.85, push_eps: float = 1e-5) -> VertexProgram:
         return jnp.zeros(valid.shape, jnp.float32), valid
 
     def init_aux(global_ids, valid):
-        del global_ids
-        residual = jnp.where(valid, 1.0 - damping, 0.0).astype(jnp.float32)
+        if restart is None:
+            residual = jnp.where(valid, 1.0 - damping, 0.0
+                                 ).astype(jnp.float32)
+        else:
+            residual = jnp.where(valid & (global_ids == restart),
+                                 1.0 - damping, 0.0).astype(jnp.float32)
         push = jnp.zeros(valid.shape, jnp.float32)
         return jnp.stack([residual, push], axis=-2)
 
     def combine(mass, weights, degrees):
+        if weighted:
+            # weights are per-source-normalized transition probabilities
+            return damping * mass * weights
         del weights  # unweighted: mass splits evenly over the edges
         return damping * mass / jnp.maximum(degrees, 1).astype(jnp.float32)
 
@@ -267,11 +290,14 @@ def pagerank(damping: float = 0.85, push_eps: float = 1e-5) -> VertexProgram:
         # LOG pending mass, negated to ascend: the biggest masses land in
         # the lowest buckets and drain first — pushing near-eps crumbs
         # before the mass that will immediately re-dirty them is what
-        # makes residual push O(total mass / eps)-free.
+        # makes residual push O(total mass / eps)-free.  abs: a streaming
+        # deletion delta injects NEGATIVE correction mass (serve/graph),
+        # and a big negative residual is exactly as urgent as a big
+        # positive one.
         floor = jnp.float32(2.0 ** -24)
-        return -jnp.log2(jnp.maximum(pending, floor))
+        return -jnp.log2(jnp.maximum(jnp.abs(pending), floor))
 
-    return VertexProgram("pagerank", "float32", SUM, False, init, combine,
+    return VertexProgram("pagerank", "float32", SUM, weighted, init, combine,
                          priority_value, self_stabilizing=False,
                          priority_scale=24.0, aux_channels=2,
                          init_aux=init_aux, push_eps=push_eps)

@@ -194,6 +194,19 @@ class VertexPartition(NamedTuple):
         hi = np.minimum(lo + self.vs, self.num_vertices)
         return np.stack([lo, np.maximum(hi, lo)], axis=1)
 
+    def locate(self, vertex_ids) -> tuple[np.ndarray, np.ndarray]:
+        """Batched (shard, local-slot) resolution with bounds checking —
+        the point-query path (serve/store.py) resolves every lookup
+        through here so queries and the engine can never disagree on
+        ownership."""
+        ids = np.asarray(vertex_ids, np.int64)
+        if ids.size and (ids.min() < 0 or ids.max() >= self.num_vertices):
+            bad = ids[(ids < 0) | (ids >= self.num_vertices)]
+            raise IndexError(
+                f"vertex ids out of range [0, {self.num_vertices}): "
+                f"{bad[:8].tolist()}")
+        return ids // self.vs, ids % self.vs
+
 
 def vertex_partition(num_vertices: int, num_shards: int) -> VertexPartition:
     assert num_vertices > 0 and num_shards > 0, (num_vertices, num_shards)

@@ -104,6 +104,36 @@ def _rebuild(struct, leaves: dict, prefix=""):
     return leaves[prefix]
 
 
+def pack_arrays(arrays: dict[str, np.ndarray]
+                ) -> tuple[dict[str, np.ndarray], dict[str, str]]:
+    """npz-safe packing: bit-exact uint16 views for bfloat16 (npz has no
+    bfloat16) plus a dtype map to invert them.  The shared codec between
+    :class:`CheckpointManager` and the serving plane's ``FixpointStore``
+    (serve/store.py) — one on-disk convention, two consumers."""
+    dtypes = {}
+    packed = {}
+    for k, v in arrays.items():
+        a = np.asarray(v)
+        dtypes[k] = str(a.dtype)
+        if a.dtype.kind == "V" or str(a.dtype) == "bfloat16":
+            a = a.view(np.uint16)
+            dtypes[k] = "bfloat16"
+        packed[k] = a
+    return packed, dtypes
+
+
+def unpack_arrays(npz, dtypes: dict[str, str]) -> dict[str, np.ndarray]:
+    """Invert :func:`pack_arrays` over an open npz (or any mapping)."""
+    leaves = {}
+    for k in npz.files if hasattr(npz, "files") else npz:
+        a = npz[k]
+        if dtypes.get(k) == "bfloat16":
+            import ml_dtypes
+            a = a.view(ml_dtypes.bfloat16)
+        leaves[k] = a
+    return leaves
+
+
 class CheckpointManager:
     """Async, manifest-committed checkpoints with retention."""
 
@@ -140,16 +170,7 @@ class CheckpointManager:
             os.makedirs(tmp, exist_ok=True)
             flat = _flatten_with_paths(host_tree)
             arrays = {k: v for k, v in flat.items() if v is not None}
-            # npz has no bfloat16: store bit-exact uint16 views + dtype map
-            dtypes = {}
-            packed = {}
-            for k, v in arrays.items():
-                a = np.asarray(v)
-                dtypes[k] = str(a.dtype)
-                if a.dtype.kind == "V" or str(a.dtype) == "bfloat16":
-                    a = a.view(np.uint16)
-                    dtypes[k] = "bfloat16"
-                packed[k] = a
+            packed, dtypes = pack_arrays(arrays)
             metadata = dict(metadata)
             metadata["__dtypes__"] = dtypes
             np.savez(os.path.join(tmp, "arrays.npz"), **packed)
@@ -196,13 +217,7 @@ class CheckpointManager:
             manifest = json.load(f)
         dtypes = manifest["metadata"].get("__dtypes__", {})
         with np.load(os.path.join(d, "arrays.npz")) as z:
-            leaves = {}
-            for k in z.files:
-                a = z[k]
-                if dtypes.get(k) == "bfloat16":
-                    import ml_dtypes
-                    a = a.view(ml_dtypes.bfloat16)
-                leaves[k] = a
+            leaves = unpack_arrays(z, dtypes)
         tree = _rebuild(manifest["structure"], leaves)
         if shardings is not None:
             tree = jax.tree.map(

@@ -1,0 +1,528 @@
+"""Online graph-mining service: resumable engine sessions + sharded
+fixpoint store + streaming-delta incremental recomputation.
+
+The write path of the serving plane (``serve/store.py`` is the read
+path).  Three cooperating pieces:
+
+  * :class:`GraphServer` — one shared graph, one resumable
+    :class:`~repro.core.engine.EngineSession` per registered program.
+    ``converge()`` ticks every session to quiescence and publishes an
+    epoch; ``apply_delta()`` patches the sharded CSR ONCE
+    (:func:`~repro.core.graph.apply_edge_delta`) then re-seeds each
+    session's frontier with only the delta-touched work and ticks back
+    to quiescence — the streaming analogue of ASYMP's "recover only
+    what was lost" principle, applied to graph mutations instead of
+    machine failures.
+
+  * delta → frontier-seed decision tree (per program class):
+
+      - **insertions, any idempotent program** — monotone aggregators
+        (MIN/MAX/OR) can only improve, and current values stay
+        achievable on the patched graph, so it suffices to re-activate
+        the inserted edges' endpoints with their CURRENT values: each
+        new edge fires once and improvements propagate from there.
+      - **deletions, label-like programs** (``cc``, ``labelprop``,
+        ``reachability``: combine forwards the value, so every vertex
+        of a component carries the same label and a value-equality
+        test degenerates to "the whole component") — a bounded BFS on
+        the patched graph asks whether the deleted edge's endpoints
+        are still connected.  Reconnected ⇒ the component set is
+        unchanged ⇒ the old fixpoint is still THE fixpoint: no-op.
+        Not provably reconnected ⇒ reset the old component (all
+        vertices sharing the endpoint's label) to program-init and
+        re-activate it; components are edge-closed, so nothing outside
+        needs to resend.
+      - **deletions, gradient-like programs** (``sssp``, ``bfs``,
+        ``widest_path``: combine strictly transforms the value) — the
+        *stale closure*: seed with deleted edges (u,v) whose message
+        ``combine(value(u), w_uv)`` bitwise-equals ``value(v)`` (v's
+        value may depend on the deleted edge), close under the same
+        test along patched-graph edges, reset the closure to init and
+        activate it PLUS its patched-graph neighbors (the intact
+        frontier re-sends valid values into the reset region).  A
+        non-suspect's value has a derivation avoiding every deleted
+        edge, hence stays a valid (and, by monotonicity of removal,
+        exact) fixpoint value.
+      - **pagerank (push mode, SUM)** — values are mass, not labels:
+        nothing is "re-derivable", but the engine maintains the
+        invariant ``r = b − p + d·Pᵀp`` at quiescence.  Patch the
+        residual in place: for every endpoint u whose out-list
+        changed, ``r ← r − d·p_u/deg_old`` over u's OLD neighbors and
+        ``r ← r + d·p_u/deg_new`` over its NEW neighbors; re-activate
+        ``|r| > push_eps``.  The engine then drains the signed
+        correction mass exactly as it drains initial mass, landing in
+        the same ``push_eps`` ball as a from-scratch run.  (This is
+        restart-vector independent, so cached personalized-pagerank
+        sessions are patched the same way.)
+      - **fallback** — weighted pagerank re-normalizes transition
+        weights globally on any topology change (``strength(src)``
+        moves), so it takes the full re-seed: fresh init state on the
+        patched graph.  Any future non-idempotent program without an
+        invariant-repair rule lands here too.
+
+    After seeding, :meth:`EngineSession.rebase_recovery` makes the
+    seeded state the recovery floor — pre-delta checkpoints and logged
+    messages describe the OLD graph and must never be restored or
+    replayed over the patched one.
+
+  * :class:`QueryServer` — slot-based batching loop modeled on
+    ``serve/engine.py``'s ``SlotServer``: queries admit into a fixed
+    number of slots, each step answers every admitted query of the
+    same kind through ONE vectorized store lookup, finished slots
+    retire and refill.  ``top_k_near(v)`` is served by a cached
+    personalized-pagerank session (``get_program("pagerank",
+    restart=v)``) whose residual is delta-patched alongside the main
+    sessions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GraphConfig
+from repro.core import programs as prog_mod
+from repro.core.engine import EngineSession, EngineState, init_state
+from repro.core.graph import (EdgeDelta, ShardedGraph, apply_edge_delta,
+                              build_sharded_graph, normalize_weights)
+from repro.dist.sharding import vertex_partition
+from repro.serve.store import FixpointStore
+
+# query kind -> the program whose fixpoint answers it
+KIND_PROGRAM = {"component_of": "cc", "distance": "sssp", "rank": "pagerank"}
+
+# combine forwards the value unchanged => value-equality closure
+# degenerates to "the whole component"; these take the connectivity
+# shortcut instead (see module docstring)
+LABEL_LIKE = frozenset({"cc", "labelprop", "reachability"})
+
+
+# ======================================================================
+# Host-side graph probes (delta seeding works on tiny, delta-local sets;
+# python loops over them are far cheaper than any device round-trip)
+# ======================================================================
+def _nbr_row(graph: ShardedGraph, u: int,
+             with_weights: bool = False):
+    """u's out-edges (global dst ids, optionally weights) from the CSR."""
+    p, l = int(u) // graph.vs, int(u) % graph.vs
+    lo, hi = int(graph.row_ptr[p, l]), int(graph.row_ptr[p, l + 1])
+    dst = graph.col_idx[p, lo:hi].astype(np.int64)
+    if not with_weights:
+        return dst
+    w = (graph.weights[p, lo:hi].astype(np.float32)
+         if graph.weights is not None else np.ones(len(dst), np.float32))
+    return dst, w
+
+
+def _edge_weight(graph: ShardedGraph, u: int, v: int) -> float:
+    dst, w = _nbr_row(graph, u, with_weights=True)
+    hit = np.nonzero(dst == v)[0]
+    if not len(hit):
+        raise KeyError(f"edge ({u}, {v}) not in graph")
+    return float(w[hit[0]])
+
+
+def _reconnected(graph: ShardedGraph, u: int, v: int,
+                 budget: int = 256) -> bool:
+    """Bounded BFS u→v on the patched graph.  True is a proof (the
+    deleted edge was redundant); False is conservative — "not provably
+    reconnected within ``budget`` visited vertices"."""
+    u, v = int(u), int(v)
+    seen = {u}
+    frontier = [u]
+    while frontier and len(seen) <= budget:
+        nxt: list[int] = []
+        for x in frontier:
+            for w in _nbr_row(graph, x):
+                w = int(w)
+                if w == v:
+                    return True
+                if w not in seen:
+                    seen.add(w)
+                    nxt.append(w)
+        frontier = nxt
+    return False
+
+
+def _combine_msgs(prog, vflat: np.ndarray, x: int, nbrs: np.ndarray,
+                  w: np.ndarray) -> np.ndarray:
+    """What x's current value would deliver to each neighbor — the
+    engine's own combine, so the equality test below is bitwise."""
+    msg = np.asarray(prog.combine(
+        jnp.asarray([[vflat[x]]]),
+        jnp.asarray(w[None, :]) if prog.weighted else None))
+    msg = msg.reshape(-1)
+    if msg.size == 1:  # unweighted combine broadcasts one message to all
+        msg = np.full(len(nbrs), msg[0], msg.dtype)
+    return msg
+
+
+def _value_closure(prog, new_graph: ShardedGraph, vflat: np.ndarray,
+                   seeds) -> np.ndarray:
+    """Close the suspect set under "w's value equals what suspect x
+    delivers over a surviving edge" — every vertex whose value might be
+    (transitively) supported by a deleted edge."""
+    suspects = {int(s) for s in seeds}
+    frontier = sorted(suspects)
+    while frontier:
+        nxt: list[int] = []
+        for x in frontier:
+            nbrs, w = _nbr_row(new_graph, x, with_weights=True)
+            if not len(nbrs):
+                continue
+            msg = _combine_msgs(prog, vflat, x, nbrs, w)
+            for wv in nbrs[msg == vflat[nbrs]]:
+                wv = int(wv)
+                if wv not in suspects:
+                    suspects.add(wv)
+                    nxt.append(wv)
+        frontier = nxt
+    return np.fromiter(suspects, np.int64, len(suspects))
+
+
+# ======================================================================
+# Frontier seeding (one function per branch of the decision tree)
+# ======================================================================
+def seed_idempotent_delta(prog, old_graph: ShardedGraph,
+                          new_graph: ShardedGraph, core: EngineState,
+                          dinfo: EdgeDelta) -> tuple[EngineState, int]:
+    """Insertion endpoints + deletion stale-reset for MIN/MAX/OR
+    programs.  Returns (seeded core state, #vertices re-activated)."""
+    P_, vs = new_graph.num_shards, new_graph.vs
+    n_pad = P_ * vs
+    vflat = np.asarray(core.values).reshape(-1).copy()
+    aflat = np.zeros(n_pad, bool)
+    cflat = np.asarray(core.cursor).reshape(-1).copy()
+
+    if len(dinfo.deleted):
+        gids = jnp.arange(n_pad, dtype=jnp.int32).reshape(P_, vs)
+        valid = gids < new_graph.num_real_vertices
+        init_vals, _ = prog.init(gids, valid)
+        iflat = np.asarray(init_vals).reshape(-1)
+        if prog.name in LABEL_LIKE:
+            suspects: set[int] = set()
+            # one direction per undirected deleted pair is enough
+            for u, v in dinfo.deleted[dinfo.deleted[:, 0]
+                                      < dinfo.deleted[:, 1]]:
+                if vflat[u] != vflat[v]:
+                    continue  # fixpoint labels agree across an edge
+                if vflat[u] == iflat[u] and vflat[v] == iflat[v]:
+                    continue  # never improved (reachability's 0-region)
+                if int(u) in suspects or _reconnected(new_graph, u, v):
+                    continue
+                # the old component: everything sharing u's label
+                comp = np.nonzero(vflat == vflat[u])[0]
+                suspects.update(int(c) for c in comp
+                                if c < new_graph.num_real_vertices)
+            suspects = np.fromiter(suspects, np.int64, len(suspects))
+            neighbors = np.zeros(0, np.int64)  # components are edge-closed
+        else:
+            seeds = []
+            for u, v in dinfo.deleted:
+                w_uv = np.asarray([_edge_weight(old_graph, u, v)],
+                                  np.float32)
+                msg = _combine_msgs(prog, vflat, int(u),
+                                    np.asarray([v], np.int64), w_uv)
+                if msg[0] == vflat[v]:
+                    seeds.append(int(v))
+            suspects = _value_closure(prog, new_graph, vflat, seeds)
+            neighbors = (np.unique(np.concatenate(
+                [_nbr_row(new_graph, s) for s in suspects]))
+                if len(suspects) else np.zeros(0, np.int64))
+        if len(suspects):
+            vflat[suspects] = iflat[suspects]
+            aflat[suspects] = True
+            aflat[neighbors] = True
+
+    if len(dinfo.inserted):
+        aflat[np.unique(dinfo.inserted)] = True
+
+    cflat[aflat] = 0
+    reactivated = int(aflat.sum())
+    seeded = core._replace(
+        values=jnp.asarray(vflat.reshape(P_, vs)),
+        active=jnp.asarray(aflat.reshape(P_, vs)),
+        cursor=jnp.asarray(cflat.reshape(P_, vs), jnp.int32))
+    return seeded, reactivated
+
+
+def seed_pagerank_delta(prog, damping: float, old_graph: ShardedGraph,
+                        new_graph: ShardedGraph, core: EngineState,
+                        dinfo: EdgeDelta) -> tuple[EngineState, int]:
+    """Residual invariant repair (see module docstring): at quiescence
+    ``r = b − p + d·Pᵀ_old·p`` exactly, so adding
+    ``d·(Pᵀ_new − Pᵀ_old)·p`` — supported only on the changed
+    endpoints' out-columns — yields the patched-graph residual without
+    touching banked mass.  Works for any restart vector b."""
+    P_, vs = new_graph.num_shards, new_graph.vs
+    vflat = np.asarray(core.values).reshape(-1).astype(np.float64)
+    aux = np.asarray(core.aux).copy()  # [P, 2, vs]
+    res = aux[:, 0, :].reshape(-1).astype(np.float64)
+    for u in dinfo.endpoints:
+        p_u = vflat[u]
+        if p_u == 0.0:
+            continue
+        old_nbrs = _nbr_row(old_graph, u)
+        new_nbrs = _nbr_row(new_graph, u)
+        if len(old_nbrs):
+            np.add.at(res, old_nbrs, -damping * p_u / len(old_nbrs))
+        if len(new_nbrs):
+            np.add.at(res, new_nbrs, damping * p_u / len(new_nbrs))
+    res32 = res.astype(np.float32)
+    aflat = np.abs(res32) > prog.push_eps
+    aux[:, 0, :] = res32.reshape(P_, vs)
+    cflat = np.asarray(core.cursor).reshape(-1).copy()
+    cflat[aflat] = 0
+    reactivated = int(aflat.sum())
+    seeded = core._replace(
+        active=jnp.asarray(aflat.reshape(P_, vs)),
+        cursor=jnp.asarray(cflat.reshape(P_, vs), jnp.int32),
+        aux=jnp.asarray(aux))
+    return seeded, reactivated
+
+
+# ======================================================================
+# The server
+# ======================================================================
+class DeltaStats(NamedTuple):
+    program: str
+    reactivated: int  # frontier size seeded by the delta
+    ticks: int  # ticks to re-quiesce (the freshness lag)
+    full_reseed: bool  # fell back to from-scratch seeding
+
+
+class GraphServer:
+    """Multi-program engine sessions over one shared mutable graph.
+
+    ``programs`` — algorithm names from the program registry; each gets
+    its own resumable session over the shared CSR.  ``weighted_rank``
+    swaps pagerank onto per-source-normalized transition weights (its
+    session then owns a normalized COPY of the graph, re-derived — and
+    fully re-seeded — on every delta: the documented fallback branch).
+    ``store_dir`` enables the epoch-versioned :class:`FixpointStore`;
+    queries then read committed epochs, not live session state.
+    """
+
+    def __init__(self, cfg: GraphConfig, programs=("cc",),
+                 store_dir: Optional[str] = None, keep_epochs: int = 2,
+                 fault_plan=None, schedule: Optional[str] = None,
+                 weighted_rank: bool = False, ppr_cache: int = 16):
+        self.cfg = cfg
+        self.graph = build_sharded_graph(cfg)
+        self.part = vertex_partition(self.graph.num_real_vertices,
+                                     self.graph.num_shards)
+        assert self.part.vs == self.graph.vs, (self.part, self.graph.vs)
+        self.weighted_rank = weighted_rank
+        self.sessions: dict[str, EngineSession] = {}
+        for name in programs:
+            pcfg = dataclasses.replace(cfg, algorithm=name)
+            if name == "pagerank" and weighted_rank:
+                prog = prog_mod.get_program("pagerank",
+                                            damping=cfg.damping,
+                                            weighted=True)
+                g = normalize_weights(self.graph)
+            else:
+                prog, g = prog_mod.get_program(pcfg), self.graph
+            self.sessions[name] = EngineSession(
+                pcfg, graph=g, prog=prog, fault_plan=fault_plan,
+                schedule=schedule)
+        self.store = (FixpointStore(store_dir, keep=keep_epochs)
+                      if store_dir else None)
+        self.epoch: Optional[int] = None
+        self._view = None
+        self._ppr: dict[int, EngineSession] = {}
+        self._ppr_cache = ppr_cache
+        self._delta_seed = 1 << 20  # weight stream disjoint from builder
+        self.deltas_applied = 0
+        self.last_delta: dict[str, DeltaStats] = {}
+
+    # -- convergence + publishing --------------------------------------
+    def converge(self, budget: Optional[int] = None) -> dict:
+        out = {name: sess.tick_until_quiescent(budget)
+               for name, sess in self.sessions.items()}
+        self.publish()
+        return out
+
+    def publish(self) -> Optional[int]:
+        """Commit every session's current fixpoint as a new epoch."""
+        if self.store is None:
+            return None
+        fixpoints = {}
+        for name, sess in self.sessions.items():
+            st = sess.state
+            fixpoints[name] = {
+                "values": np.asarray(st.values),
+                "aux": (np.asarray(st.aux) if st.aux is not None
+                        else None)}
+        self.epoch = self.store.publish(
+            fixpoints, self.part, meta={"deltas": self.deltas_applied})
+        self._view = self.store.view(self.epoch)
+        return self.epoch
+
+    # -- point queries -------------------------------------------------
+    def lookup(self, program: str, vertex_ids) -> np.ndarray:
+        """Batched fixpoint lookup, through the committed epoch when a
+        store is attached (the ``FixpointView`` path), else live."""
+        if program not in self.sessions:
+            raise KeyError(f"program {program!r} not served; "
+                           f"have {sorted(self.sessions)}")
+        ids = np.atleast_1d(np.asarray(vertex_ids, np.int64))
+        if self._view is not None:
+            return self._view.lookup(program, ids)
+        self.part.locate(ids)  # bounds check, same rule as the store
+        flat = np.asarray(self.sessions[program].state.values).reshape(-1)
+        return flat[ids]
+
+    def component_of(self, v):
+        return self.lookup("cc", v)
+
+    def distance(self, v):
+        return self.lookup("sssp", v)
+
+    def rank(self, v):
+        return self.lookup("pagerank", v)
+
+    def top_k_near(self, v: int, k: int = 8) -> list[tuple[int, float]]:
+        """k highest personalized-pagerank vertices around v (v's own
+        mass included — it holds the restart probability).  Served by a
+        cached PPR session; deterministic ties break toward lower id."""
+        v = int(v)
+        sess = self._ppr.get(v)
+        if sess is None:
+            if len(self._ppr) >= self._ppr_cache:
+                self._ppr.pop(next(iter(self._ppr)))
+            pcfg = dataclasses.replace(self.cfg, algorithm="pagerank")
+            prog = prog_mod.get_program("pagerank", damping=self.cfg.damping,
+                                        restart=v)
+            sess = EngineSession(pcfg, graph=self.graph, prog=prog)
+            sess.tick_until_quiescent()
+            self._ppr[v] = sess
+        n = self.graph.num_real_vertices
+        ranks = np.asarray(sess.state.values).reshape(-1)[:n]
+        order = np.lexsort((np.arange(n), -ranks))[:k]
+        return [(int(i), float(ranks[i])) for i in order]
+
+    # -- the streaming mutation path -----------------------------------
+    def apply_delta(self, insertions=(), deletions=(),
+                    budget: Optional[int] = None) -> dict[str, DeltaStats]:
+        """Patch the CSR once, re-seed every session's frontier with the
+        delta-touched work, tick back to quiescence, publish."""
+        old_graph = self.graph
+        new_graph, dinfo = apply_edge_delta(
+            old_graph, insertions, deletions, seed=self._delta_seed)
+        self._delta_seed += 1
+        self.graph = new_graph
+        changed = bool(len(dinfo.inserted) + len(dinfo.deleted))
+        stats: dict[str, DeltaStats] = {}
+        for name, sess in self.sessions.items():
+            t0 = sess.totals["ticks"]
+            if not changed:
+                stats[name] = DeltaStats(name, 0, 0, False)
+                continue
+            reactivated, full = self._reseed(name, sess, old_graph,
+                                             new_graph, dinfo)
+            sess.rebase_recovery()
+            sess.tick_until_quiescent(budget)
+            stats[name] = DeltaStats(name, reactivated,
+                                     sess.totals["ticks"] - t0, full)
+        if changed:
+            # cached PPR sessions take the same residual repair (it is
+            # restart-independent) so top_k_near stays delta-fresh
+            for v, sess in self._ppr.items():
+                seeded, _ = seed_pagerank_delta(
+                    sess.prog, self.cfg.damping, old_graph, new_graph,
+                    sess.state, dinfo)
+                sess.rebind_graph(new_graph)
+                sess.replace_state(seeded)
+                sess.tick_until_quiescent(budget)
+        self.deltas_applied += 1
+        self.publish()
+        self.last_delta = stats
+        return stats
+
+    def _reseed(self, name: str, sess: EngineSession,
+                old_graph: ShardedGraph, new_graph: ShardedGraph,
+                dinfo: EdgeDelta) -> tuple[int, bool]:
+        prog = sess.prog
+        if name == "pagerank" and self.weighted_rank:
+            # normalization is global on any topology change: fallback
+            g = normalize_weights(new_graph)
+            sess.rebind_graph(g)
+            seeded = init_state(prog, g)
+            sess.replace_state(seeded)
+            return int(np.asarray(seeded.active).sum()), True
+        if prog.aux_channels:  # push mode: residual invariant repair
+            seeded, reactivated = seed_pagerank_delta(
+                prog, self.cfg.damping, old_graph, new_graph,
+                sess.state, dinfo)
+        else:
+            seeded, reactivated = seed_idempotent_delta(
+                prog, old_graph, new_graph, sess.state, dinfo)
+        sess.rebind_graph(new_graph)
+        sess.replace_state(seeded)
+        return reactivated, False
+
+
+# ======================================================================
+# Slot-based query batching (modeled on serve/engine.py's SlotServer)
+# ======================================================================
+class GraphQuery(NamedTuple):
+    rid: int
+    kind: str  # component_of | distance | rank | top_k_near
+    vertex: int
+    k: int = 8
+
+
+class QueryServer:
+    """Continuous batching for point queries: fixed slots, greedy
+    refill, one vectorized store lookup per (kind, step)."""
+
+    def __init__(self, server: GraphServer, num_slots: int = 16):
+        self.server = server
+        self.num_slots = num_slots
+        self.queue: list[GraphQuery] = []
+        self.active: dict[int, GraphQuery] = {}  # slot -> query
+        self.done: dict[int, object] = {}  # rid -> answer
+        self.batches = 0
+        self.served = 0
+
+    def submit(self, q: GraphQuery) -> None:
+        if q.kind != "top_k_near" and q.kind not in KIND_PROGRAM:
+            raise ValueError(f"unknown query kind {q.kind!r}")
+        self.queue.append(q)
+
+    def _admit(self) -> None:
+        free = [s for s in range(self.num_slots) if s not in self.active]
+        while free and self.queue:
+            self.active[free.pop(0)] = self.queue.pop(0)
+
+    def step(self) -> None:
+        """Admit + answer one batch: every admitted query of the same
+        kind shares a single vectorized lookup."""
+        self._admit()
+        if not self.active:
+            return
+        by_kind: dict[str, list[tuple[int, GraphQuery]]] = {}
+        for slot, q in self.active.items():
+            by_kind.setdefault(q.kind, []).append((slot, q))
+        for kind, batch in sorted(by_kind.items()):
+            if kind == "top_k_near":
+                for _, q in batch:
+                    self.done[q.rid] = self.server.top_k_near(q.vertex, q.k)
+            else:
+                ids = np.asarray([q.vertex for _, q in batch], np.int64)
+                vals = self.server.lookup(KIND_PROGRAM[kind], ids)
+                for (_, q), val in zip(batch, vals):
+                    self.done[q.rid] = (float(val)
+                                        if vals.dtype.kind == "f"
+                                        else int(val))
+        self.served += len(self.active)
+        self.active.clear()
+        self.batches += 1
+
+    def run(self) -> dict[int, object]:
+        while self.queue or self.active:
+            self.step()
+        return self.done
