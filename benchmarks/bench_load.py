@@ -1,0 +1,248 @@
+"""Serving under load: closed-loop throughput / latency with a
+concurrent delta stream, admission-control behavior at overload, and
+the PPR session-cache economics.
+
+The closed loop interleaves slot-batched query traffic with a stream of
+double-buffered 1-edge delta transactions: every batch is answered
+through one pinned epoch view while the shadow sessions tick toward the
+next epoch.  The smoke subset is the acceptance gate for the
+double-buffer protocol: ZERO torn reads (every full-graph probe matches
+one committed snapshot bitwise), freshness lag bounded by the single
+in-flight transaction (max 1, back to 0 after the last commit), zero
+rejections at smoke load, and a PPR cache hit rate > 0 when hot restart
+vertices are re-queried across a delta.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_cli, emit
+from repro.configs.base import GraphConfig
+from repro.serve.engine import QueueFullError
+from repro.serve.graph import GraphQuery, GraphServer, QueryServer
+
+AREA = "load"
+
+SMOKE_DELTAS = 3  # 1-edge transactions streamed through the smoke loop
+
+
+def _load_cfg(log2n: int = 13, **kw) -> GraphConfig:
+    base = dict(name=f"rmat{log2n}", algorithm="cc",
+                num_vertices=1 << log2n, avg_degree=16, generator="rmat",
+                num_shards=8, priority="log", enforce_fraction=0.1)
+    base.update(kw)
+    return GraphConfig(**base)
+
+
+class LoopStats:
+    """What one closed-loop run measured."""
+
+    def __init__(self):
+        self.batch_us: list[float] = []
+        self.batch_sizes: list[int] = []
+        self.torn = 0
+        self.rejected = 0
+        self.deltas_committed = 0
+        self.wall_s = 0.0
+
+    @property
+    def served(self) -> int:
+        return sum(self.batch_sizes)
+
+    @property
+    def qps(self) -> float:
+        return self.served / self.wall_s if self.wall_s else 0.0
+
+    def query_us(self, pct: float) -> float:
+        """Latency percentile over per-query costs (batch wall divided
+        across the queries it answered)."""
+        per_q = [us / max(sz, 1)
+                 for us, sz in zip(self.batch_us, self.batch_sizes) if sz]
+        return float(np.percentile(per_q, pct)) if per_q else 0.0
+
+
+def _snapshot(srv: GraphServer, ids: np.ndarray) -> np.ndarray:
+    with srv.reader() as view:
+        return np.asarray(srv.lookup("cc", ids, view=view)).copy()
+
+
+def _closed_loop(srv: GraphServer, qs: QueryServer, rng,
+                 iters: int, per_batch: int, deltas: int,
+                 ticks_per_batch: int = 2) -> LoopStats:
+    """Drive query batches and a 1-edge delta stream cooperatively:
+    each iteration submits a batch, answers it through one pinned
+    reader, probes the full graph for torn reads, then advances the
+    in-flight transaction a couple of shadow ticks."""
+    n = srv.graph.num_real_vertices
+    ids = np.arange(n)
+    committed = [_snapshot(srv, ids)]  # epoch-N baseline
+    out = LoopStats()
+    txn = None
+    rid = 0
+    t_loop = time.perf_counter()
+    for it in range(iters):
+        served_before = qs.served
+        for _ in range(per_batch):
+            try:
+                qs.submit(GraphQuery(rid, "component_of",
+                                     int(rng.integers(n))))
+            except QueueFullError:
+                out.rejected += 1
+            rid += 1
+        t0 = time.perf_counter()
+        qs.step()
+        out.batch_us.append((time.perf_counter() - t0) * 1e6)
+        out.batch_sizes.append(qs.served - served_before)
+        # full-coverage probe: must match SOME committed snapshot exactly
+        probe = _snapshot(srv, ids)
+        if not any(np.array_equal(probe, snap) for snap in committed):
+            out.torn += 1
+        # advance the mutation stream
+        if txn is None and out.deltas_committed < deltas:
+            u, v = int(rng.integers(n)), int(rng.integers(n))
+            txn = srv.begin_delta(insertions=[(u, v)])
+        elif txn is not None:
+            txn.step(ticks_per_batch)
+            if txn.done:
+                txn.commit()
+                committed.append(_snapshot(srv, ids))
+                out.deltas_committed += 1
+                txn = None
+    # drain: finish the in-flight transaction and the queue
+    if txn is not None:
+        txn.run()
+        txn.commit()
+        committed.append(_snapshot(srv, ids))
+        out.deltas_committed += 1
+    while len(qs.queue):
+        served_before = qs.served
+        t0 = time.perf_counter()
+        qs.step()
+        out.batch_us.append((time.perf_counter() - t0) * 1e6)
+        out.batch_sizes.append(qs.served - served_before)
+    out.wall_s = time.perf_counter() - t_loop
+    return out
+
+
+def _ppr_cache_economy(rng, log2n: int = 10):
+    """Two rounds of top_k_near on the same restart vertices with a
+    1-edge delta in between: round 2 must HIT the cache (warm repaired
+    sessions), not rebuild."""
+    cfg = _load_cfg(log2n, enforce_fraction=1.0, max_ticks=60000)
+    srv = GraphServer(cfg, programs=("cc",), ppr_cache=8)
+    srv.converge()
+    n = srv.graph.num_real_vertices
+    hot = [int(rng.integers(n)) for _ in range(2)]
+    t0 = time.perf_counter()
+    for v in hot:
+        srv.top_k_near(v, k=8)
+    build_s = time.perf_counter() - t0
+    srv.apply_delta(insertions=[(hot[0], int(rng.integers(n)))])
+    t0 = time.perf_counter()
+    for v in hot:
+        srv.top_k_near(v, k=8)
+    repair_s = time.perf_counter() - t0
+    return srv, cfg, build_s, repair_s
+
+
+def main() -> None:
+    print("== serving under load: closed loop, overload, PPR cache ==")
+    rng = np.random.default_rng(13)
+    cfg = _load_cfg(13)
+
+    # -- steady state: no mutations, pure query traffic ---------------
+    with tempfile.TemporaryDirectory() as d:
+        srv = GraphServer(cfg, programs=("cc",), store_dir=d)
+        srv.converge()
+        qs = QueryServer(srv, num_slots=32)
+        st = _closed_loop(srv, qs, rng, iters=24, per_batch=32, deltas=0)
+        emit("load/steady", st.wall_s * 1e6,
+             f"queries_per_s={st.qps:.0f};p50_us={st.query_us(50):.1f};"
+             f"p99_us={st.query_us(99):.1f};served={st.served};"
+             f"torn={st.torn}", config=cfg)
+
+        # -- under a delta stream: same traffic + 1-edge transactions -
+        qs = QueryServer(srv, num_slots=32)
+        st = _closed_loop(srv, qs, rng, iters=24, per_batch=32, deltas=3)
+        emit("load/delta_stream", st.wall_s * 1e6,
+             f"queries_per_s={st.qps:.0f};p50_us={st.query_us(50):.1f};"
+             f"p99_us={st.query_us(99):.1f};served={st.served};"
+             f"deltas={st.deltas_committed};torn={st.torn};"
+             f"lag_max={qs.lag_max};"
+             f"lag_mean={qs.stats()['freshness_lag_mean']:.3f}",
+             config=cfg)
+
+        # -- overload: tiny queue, oversized bursts -> typed rejection
+        qs = QueryServer(srv, num_slots=4, max_queue=8)
+        st = _closed_loop(srv, qs, rng, iters=16, per_batch=64, deltas=0)
+        offered = st.served + st.rejected
+        emit("load/overload", st.wall_s * 1e6,
+             f"rejected={st.rejected};served={st.served};"
+             f"rejection_rate={st.rejected / max(offered, 1):.3f};"
+             f"torn={st.torn}", config=cfg)
+
+    # -- PPR cache economics ------------------------------------------
+    srv, pcfg, build_s, repair_s = _ppr_cache_economy(rng)
+    cs = srv.ppr_cache.stats()
+    emit("load/ppr_cache", build_s * 1e6,
+         f"repair_us={repair_s * 1e6:.0f};hits={cs['hits']};"
+         f"misses={cs['misses']};hit_rate={cs['hit_rate']:.3f};"
+         f"invalidations={cs['invalidations']};"
+         f"speedup={build_s / max(repair_s, 1e-9):.1f}", config=pcfg)
+
+
+def smoke() -> None:
+    """CI acceptance gate for the double-buffer serving protocol (see
+    module docstring for the four conditions)."""
+    rng = np.random.default_rng(17)
+    cfg = _load_cfg(13)
+    with tempfile.TemporaryDirectory() as d:
+        srv = GraphServer(cfg, programs=("cc",), store_dir=d)
+        srv.converge()
+        qs = QueryServer(srv, num_slots=32, max_queue=256)
+        t0 = time.perf_counter()
+        st = _closed_loop(srv, qs, rng, iters=24, per_batch=16,
+                          deltas=SMOKE_DELTAS)
+        wall = time.perf_counter() - t0
+        lag_final = qs.lag_last
+        ok = (st.torn == 0 and st.rejected == 0 and qs.lag_max <= 1
+              and lag_final == 0 and st.deltas_committed == SMOKE_DELTAS
+              and st.served > 0)
+        emit("smoke/load/delta_stream_cc", wall * 1e6,
+             f"torn={st.torn};rejected={st.rejected};"
+             f"lag_max={qs.lag_max};lag_final={lag_final};"
+             f"deltas={st.deltas_committed};served={st.served};"
+             f"queries_per_s={st.qps:.0f};p99_us={st.query_us(99):.1f}",
+             verdict="pass" if ok else "fail", config=cfg)
+        assert st.torn == 0, \
+            f"smoke: {st.torn} torn reads (batch matched NO committed epoch)"
+        assert st.rejected == 0, \
+            f"smoke: {st.rejected} rejections at smoke load"
+        assert qs.lag_max <= 1 and lag_final == 0, \
+            f"smoke: freshness lag unbounded (max={qs.lag_max}, " \
+            f"final={lag_final})"
+        assert st.deltas_committed == SMOKE_DELTAS and st.served > 0
+        print(f"== smoke OK: {st.served} queries over {st.deltas_committed} "
+              f"in-flight deltas, 0 torn reads, lag_max={qs.lag_max} ==")
+
+    srv, pcfg, build_s, repair_s = _ppr_cache_economy(rng)
+    cs = srv.ppr_cache.stats()
+    ok = cs["hit_rate"] > 0 and cs["hits"] >= 2 and cs["invalidations"] >= 1
+    emit("smoke/load/ppr_cache_warm", build_s * 1e6,
+         f"repair_us={repair_s * 1e6:.0f};hits={cs['hits']};"
+         f"misses={cs['misses']};hit_rate={cs['hit_rate']:.3f};"
+         f"invalidations={cs['invalidations']}",
+         verdict="pass" if ok else "fail", config=pcfg)
+    assert cs["hits"] >= 2 and cs["hit_rate"] > 0, \
+        f"smoke: hot restart vertices missed the PPR cache: {cs}"
+    assert cs["invalidations"] >= 1, \
+        "smoke: the delta did not invalidate the cached PPR sessions"
+    print(f"== smoke OK: PPR cache hit_rate={cs['hit_rate']:.2f} across a "
+          f"delta (build {build_s:.1f}s -> repair {repair_s:.1f}s) ==")
+
+
+if __name__ == "__main__":
+    bench_cli(AREA, main, smoke)

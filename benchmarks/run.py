@@ -25,12 +25,12 @@ def modules() -> list:
     # ACROSS figures and has its own driver (and its own CI line) —
     # ``python -m benchmarks.bench_matrix [--smoke]``
     from benchmarks import (bench_crowded, bench_evolution, bench_faults,
-                            bench_kernels, bench_messages, bench_parallel,
-                            bench_priority, bench_scalability, bench_serve,
-                            bench_speed)
+                            bench_kernels, bench_load, bench_messages,
+                            bench_parallel, bench_priority,
+                            bench_scalability, bench_serve, bench_speed)
     return [bench_speed, bench_scalability, bench_parallel, bench_faults,
             bench_crowded, bench_priority, bench_messages, bench_evolution,
-            bench_kernels, bench_serve]
+            bench_kernels, bench_serve, bench_load]
 
 
 def main(argv=None) -> None:

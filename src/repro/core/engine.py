@@ -1397,6 +1397,44 @@ class EngineSession:
         return out
 
     # -- streaming-delta hooks (serve/graph.py) ------------------------
+    def fork(self) -> "EngineSession":
+        """A shadow copy of this session: same graph / program / params
+        / schedule, with the CURRENT run state (core state, ring and
+        clock planes, host step, cumulative totals) duplicated so the
+        fork and the original tick independently from this instant.
+
+        This is the double-buffered serving path's write handle: the
+        primary session keeps answering queries at the committed
+        fixpoint while the fork absorbs a streaming delta and ticks
+        toward the next epoch; at commit the fork atomically replaces
+        the primary (``serve/graph.py::DeltaTransaction``).
+
+        The compiled tick function is SHARED (it is a pure function of
+        (program, params) — a fork must not pay a second JIT compile).
+        Engine state lives in immutable jax arrays, so duplicating the
+        wrapper tuples is a true logical copy.  The fork gets a FRESH
+        FaultManager (no message log / snapshots): callers seed it with
+        ``rebase_recovery()``, exactly as the delta path requires."""
+        new = EngineSession(self.cfg, graph=self.graph, prog=self.prog,
+                            params=self.ep, collect_log=self.collect_log,
+                            fault_plan=self.fault_plan, latency=self.latency,
+                            schedule=self.schedule)
+        new._tick_fn = self._tick_fn
+        if self.schedule == "async":
+            new._astate = self._astate
+            new._shard_busy = np.asarray(self._shard_busy).copy()
+        elif self.crowded:
+            new._cstate = self._cstate
+        else:
+            new._state = self._state
+        new._n_active = self._n_active
+        new._pending = self._pending
+        new._ring_ckpt = self._ring_ckpt
+        new._t = self._t
+        new.totals = dict(self.totals)
+        new.log = list(self.log)
+        return new
+
     def replace_state(self, core: EngineState) -> None:
         """Swap the core engine state (host-side delta seeding) and
         refresh the activity counters.  The ring / demotion / clock

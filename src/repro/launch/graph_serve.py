@@ -24,6 +24,7 @@ import time
 import numpy as np
 
 from repro.configs import get_graph_config
+from repro.serve.engine import QueueFullError
 from repro.serve.graph import (KIND_PROGRAM, GraphQuery, GraphServer,
                                QueryServer)
 
@@ -45,6 +46,12 @@ def main() -> None:
     ap.add_argument("--delta-size", type=int, default=1,
                     help="edges inserted per delta")
     ap.add_argument("--slots", type=int, default=16)
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound the admission queue (submits past it are "
+                         "rejected with typed backpressure)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-query deadline budget in milliseconds "
+                         "(overdue queries retire with a typed answer)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--reduced", action="store_true",
                     help="run the config's tiny .reduced() variant")
@@ -92,19 +99,33 @@ def main() -> None:
     rng = np.random.default_rng(args.seed)
     n = srv.graph.num_real_vertices
     kinds = sorted(k for k in KIND_PROGRAM if KIND_PROGRAM[k] in programs)
-    qs = QueryServer(srv, num_slots=args.slots)
+    qs = QueryServer(
+        srv, num_slots=args.slots, max_queue=args.max_queue,
+        deadline_s=(args.deadline_ms / 1e3
+                    if args.deadline_ms is not None else None))
     rid = 0
+    rejected = 0
     for _ in range(args.queries):
-        qs.submit(GraphQuery(rid, kinds[rid % len(kinds)],
-                             int(rng.integers(n))))
+        try:
+            qs.submit(GraphQuery(rid, kinds[rid % len(kinds)],
+                                 int(rng.integers(n))))
+        except QueueFullError:
+            rejected += 1
         rid += 1
     for _ in range(args.topk):
-        qs.submit(GraphQuery(rid, "top_k_near", int(rng.integers(n)), k=5))
+        try:
+            qs.submit(GraphQuery(rid, "top_k_near", int(rng.integers(n)),
+                                 k=5))
+        except QueueFullError:
+            rejected += 1
         rid += 1
     t0 = time.time()
     done = qs.run()
+    qstats = qs.stats()
     print(f"[graph_serve] answered {qs.served} queries in {qs.batches} "
-          f"batches ({time.time() - t0:.3f}s)")
+          f"batches ({time.time() - t0:.3f}s); rejected={qstats['rejected']} "
+          f"deadline_exceeded={qstats['deadline_exceeded']} "
+          f"freshness_lag_max={qstats['freshness_lag_max']}")
 
     delta_rows = []
     for i in range(args.deltas):
@@ -124,11 +145,17 @@ def main() -> None:
               f"freshness lag {worst} ticks, epoch={srv.epoch} "
               f"({wall:.2f}s)")
 
+    cstats = srv.ppr_cache.stats()
+    print(f"[graph_serve] ppr cache: size={cstats['size']}/"
+          f"{cstats['capacity']} hits={cstats['hits']} "
+          f"misses={cstats['misses']} hit_rate={cstats['hit_rate']:.2f} "
+          f"invalidations={cstats['invalidations']}")
+
     if args.metrics:
         with open(args.metrics, "w") as f:
             json.dump({"queries": qs.served, "batches": qs.batches,
-                       "epoch": srv.epoch, "deltas": delta_rows}, f,
-                      indent=1)
+                       "epoch": srv.epoch, "deltas": delta_rows,
+                       "admission": qs.stats()}, f, indent=1)
         print(f"[graph_serve] wrote metrics to {args.metrics}")
     del done
 

@@ -73,10 +73,43 @@ path).  Three cooperating pieces:
     personalized-pagerank session (``get_program("pagerank",
     restart=v)``) whose residual is delta-patched alongside the main
     sessions.
+
+Serving under load (the concurrency contract):
+
+  * **double-buffered epochs** — :meth:`GraphServer.begin_delta` opens
+    a :class:`DeltaTransaction`: every session is ``fork()``-ed, the
+    shadow is seeded with the delta frontier and ticked (stepwise or to
+    completion) while queries keep reading the COMMITTED epoch N —
+    the primary sessions and the pinned store view are untouched until
+    :meth:`DeltaTransaction.commit` atomically swaps sessions, graph,
+    and the published view to epoch N+1.  ``apply_delta`` is now a thin
+    begin → run → commit wrapper, so the one-call API is unchanged.
+  * **reader-pinned GC** — every query batch reads through ONE pinned
+    :class:`~repro.serve.store.FixpointView` acquired via
+    :meth:`GraphServer.reader`; keep-N GC skips pinned epochs, so a
+    batch can never see a torn mix of epoch N and N+1 values and a
+    lazy shard load can never hit a deleted file.
+  * **admission control + deadlines** — :class:`QueryServer` owns a
+    bounded :class:`~repro.serve.engine.AdmissionQueue`: a full queue
+    rejects at submit time with a typed
+    :class:`~repro.serve.engine.QueueFullError`, and a query that
+    outlives its deadline budget retires with a typed
+    :class:`~repro.serve.engine.DeadlineExceeded` answer instead of
+    occupying a slot.  ``stats()`` snapshots the backpressure counters
+    and the freshness lag (how many begun deltas the answering epoch
+    has not yet absorbed).
+  * **LRU+TTL PPR cache** — personalized-pagerank sessions live in a
+    :class:`~repro.serve.cache.LRUTTLCache` (recency eviction, idle
+    TTL, hit/miss/eviction counters).  A delta *invalidates* entries
+    without dropping them: the residual repair is restart-independent,
+    so the next access patches the warm session in place instead of
+    reconverging from scratch.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import time
 from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
@@ -88,7 +121,10 @@ from repro.core.engine import EngineSession, EngineState, init_state
 from repro.core.graph import (EdgeDelta, ShardedGraph, apply_edge_delta,
                               build_sharded_graph, normalize_weights)
 from repro.dist.sharding import vertex_partition
-from repro.serve.store import FixpointStore
+from repro.serve.cache import LRUTTLCache
+from repro.serve.engine import (AdmissionQueue, DeadlineExceeded,
+                                QueueFullError)
+from repro.serve.store import FixpointStore, FixpointView
 
 # query kind -> the program whose fixpoint answers it
 KIND_PROGRAM = {"component_of": "cc", "distance": "sssp", "rank": "pagerank"}
@@ -293,6 +329,131 @@ class DeltaStats(NamedTuple):
     full_reseed: bool  # fell back to from-scratch seeding
 
 
+class PPREntry:
+    """One cached personalized-pagerank session plus its pending
+    delta-repair records.  A delta marks the entry stale by appending
+    ``(old_graph, new_graph, dinfo)``; the next access applies the
+    residual repairs in sequence (they compose: each one re-establishes
+    the invariant for its patched graph without ticking) and reconverges
+    the WARM session — never from scratch."""
+
+    __slots__ = ("session", "pending")
+
+    def __init__(self, session: EngineSession):
+        self.session = session
+        self.pending: list[tuple[ShardedGraph, ShardedGraph, EdgeDelta]] = []
+
+
+class LiveView(NamedTuple):
+    """Store-less analogue of a pinned ``FixpointView``: an atomic
+    snapshot of every primary session's values, captured in one grab of
+    ``GraphServer.sessions`` (sessions are swapped wholesale at delta
+    commit, and jax arrays are immutable, so the captured planes can
+    never mutate under the reader)."""
+    values: dict  # program -> flat np.ndarray [n_pad]
+    part: object  # VertexPartition (bounds check, same rule as store)
+    deltas_visible: int
+    epoch: Optional[int]
+
+    def lookup(self, name: str, vertex_ids) -> np.ndarray:
+        if name not in self.values:
+            raise KeyError(f"program {name!r} not served; "
+                           f"have {sorted(self.values)}")
+        ids = np.atleast_1d(np.asarray(vertex_ids, np.int64))
+        self.part.locate(ids)  # bounds check
+        return self.values[name][ids]
+
+
+class DeltaTransaction:
+    """One in-flight streaming delta, double-buffered.
+
+    Construction patches the CSR and seeds a ``fork()`` of every
+    primary session with the delta frontier; :meth:`step` ticks the
+    shadows (interleave query batches between calls), :meth:`commit`
+    atomically swaps shadows/graph/epoch in.  Until commit, the
+    server's primary sessions, committed store view, and ``graph``
+    attribute are untouched — readers stay on epoch N."""
+
+    def __init__(self, server: "GraphServer", insertions=(), deletions=()):
+        self.server = server
+        self.old_graph = server.graph
+        new_graph, dinfo = apply_edge_delta(
+            self.old_graph, insertions, deletions, seed=server._delta_seed)
+        server._delta_seed += 1
+        self.new_graph, self.dinfo = new_graph, dinfo
+        self.changed = bool(len(dinfo.inserted) + len(dinfo.deleted))
+        self.committed = False
+        self.shadows: dict[str, EngineSession] = {}
+        self._seeded: dict[str, tuple[int, bool]] = {}
+        self._t0: dict[str, int] = {}
+        if self.changed:
+            for name, sess in server.sessions.items():
+                shadow = sess.fork()
+                self._t0[name] = shadow.totals["ticks"]
+                reactivated, full = server._reseed(
+                    name, shadow, self.old_graph, new_graph, dinfo)
+                shadow.rebase_recovery()
+                self.shadows[name] = shadow
+                self._seeded[name] = (reactivated, full)
+
+    @property
+    def done(self) -> bool:
+        return (not self.changed) or all(s.quiescent
+                                         for s in self.shadows.values())
+
+    def step(self, ticks: int = 1) -> bool:
+        """Tick every non-quiescent shadow up to ``ticks`` times;
+        returns :attr:`done`.  Queries served between calls read the
+        committed epoch untouched — this is the freshness lag."""
+        for shadow in self.shadows.values():
+            for _ in range(ticks):
+                if shadow.quiescent:
+                    break
+                shadow.step()
+        return self.done
+
+    def run(self, budget: Optional[int] = None) -> bool:
+        """Drive every shadow to quiescence (``budget`` ticks per
+        session, default ``cfg.max_ticks``) — the synchronous path
+        ``apply_delta`` uses."""
+        for shadow in self.shadows.values():
+            shadow.tick_until_quiescent(budget)
+        return self.done
+
+    def commit(self) -> dict[str, DeltaStats]:
+        """Atomically swap the shadows in: sessions, graph, PPR-cache
+        invalidation, epoch publish + view flip — the single instant
+        readers move from epoch N to N+1."""
+        if not self.done:
+            raise RuntimeError("delta transaction not quiescent; "
+                               "step() or run() it to completion first")
+        if self.committed:
+            raise RuntimeError("delta transaction already committed")
+        server = self.server
+        if self.changed:
+            stats = {}
+            for name, shadow in self.shadows.items():
+                reactivated, full = self._seeded[name]
+                stats[name] = DeltaStats(
+                    name, reactivated,
+                    shadow.totals["ticks"] - self._t0[name], full)
+            server.sessions = self.shadows
+            # stale-but-warm: cached PPR sessions get a repair record,
+            # not an eviction (the residual fix is restart-independent)
+            rec = (self.old_graph, self.new_graph, self.dinfo)
+            server._ppr.invalidate(lambda entry: entry.pending.append(rec))
+        else:
+            stats = {name: DeltaStats(name, 0, 0, False)
+                     for name in server.sessions}
+        server.graph = self.new_graph
+        server.deltas_applied += 1
+        server.last_delta = stats
+        server._txn = None
+        self.committed = True
+        server.publish()
+        return stats
+
+
 class GraphServer:
     """Multi-program engine sessions over one shared mutable graph.
 
@@ -308,7 +469,9 @@ class GraphServer:
     def __init__(self, cfg: GraphConfig, programs=("cc",),
                  store_dir: Optional[str] = None, keep_epochs: int = 2,
                  fault_plan=None, schedule: Optional[str] = None,
-                 weighted_rank: bool = False, ppr_cache: int = 16):
+                 weighted_rank: bool = False, ppr_cache: int = 16,
+                 ppr_ttl: Optional[float] = None,
+                 clock=time.monotonic):
         self.cfg = cfg
         self.graph = build_sharded_graph(cfg)
         self.part = vertex_partition(self.graph.num_real_vertices,
@@ -331,12 +494,21 @@ class GraphServer:
         self.store = (FixpointStore(store_dir, keep=keep_epochs)
                       if store_dir else None)
         self.epoch: Optional[int] = None
-        self._view = None
-        self._ppr: dict[int, EngineSession] = {}
-        self._ppr_cache = ppr_cache
+        self._view: Optional[FixpointView] = None
+        self._prev_view: Optional[FixpointView] = None
+        self._ppr = LRUTTLCache(capacity=ppr_cache, ttl=ppr_ttl,
+                                clock=clock)
         self._delta_seed = 1 << 20  # weight stream disjoint from builder
-        self.deltas_applied = 0
+        self.deltas_applied = 0  # committed mutations
+        self.deltas_started = 0  # begun mutations (>= applied)
+        self._txn: Optional[DeltaTransaction] = None
         self.last_delta: dict[str, DeltaStats] = {}
+
+    @property
+    def ppr_cache(self) -> LRUTTLCache:
+        """The personalized-pagerank session cache (counters live on
+        it: ``srv.ppr_cache.stats()``)."""
+        return self._ppr
 
     # -- convergence + publishing --------------------------------------
     def converge(self, budget: Optional[int] = None) -> dict:
@@ -346,7 +518,11 @@ class GraphServer:
         return out
 
     def publish(self) -> Optional[int]:
-        """Commit every session's current fixpoint as a new epoch."""
+        """Commit every session's current fixpoint as a new epoch and
+        flip the committed view to it.  Double-buffered: the PREVIOUS
+        view stays pinned until the flip after next, so readers that
+        grabbed it an instant before the flip finish their lazy loads
+        against a retained epoch."""
         if self.store is None:
             return None
         fixpoints = {}
@@ -358,13 +534,55 @@ class GraphServer:
                         else None)}
         self.epoch = self.store.publish(
             fixpoints, self.part, meta={"deltas": self.deltas_applied})
-        self._view = self.store.view(self.epoch)
+        new_view = self.store.view(self.epoch)
+        if self._prev_view is not None:
+            self._prev_view.close()
+        self._prev_view, self._view = self._view, new_view
         return self.epoch
 
     # -- point queries -------------------------------------------------
-    def lookup(self, program: str, vertex_ids) -> np.ndarray:
+    @contextlib.contextmanager
+    def reader(self):
+        """Pinned read handle for one query batch: a ``FixpointView``
+        on the committed epoch (store mode) or a :class:`LiveView`
+        snapshot of the primary sessions (live mode).  Everything
+        answered under one ``reader()`` is consistent with ONE epoch —
+        the no-torn-reads guarantee — and the pin keeps GC away from
+        the epoch for the batch's whole lifetime."""
+        view = self._view
+        if view is None:
+            sessions = self.sessions  # one atomic grab (commit swaps it)
+            yield LiveView(
+                {n: np.asarray(s.state.values).reshape(-1)
+                 for n, s in sessions.items()},
+                self.part, self.deltas_applied, None)
+            return
+        while True:
+            if self.store.pin(view.epoch):
+                break
+            view = self._view  # epoch flipped+collected under us: retry
+        try:
+            yield view
+        finally:
+            self.store.unpin(view.epoch)
+
+    def freshness_lag(self, view) -> int:
+        """Epoch age at read time: how many BEGUN mutations the epoch
+        the reader is answering from has not yet absorbed (0 = fully
+        fresh; 1 while a delta transaction is in flight)."""
+        if isinstance(view, LiveView):
+            visible = view.deltas_visible
+        else:
+            visible = int(view.manifest.get("meta", {}).get("deltas", 0))
+        return self.deltas_started - visible
+
+    def lookup(self, program: str, vertex_ids,
+               view=None) -> np.ndarray:
         """Batched fixpoint lookup, through the committed epoch when a
-        store is attached (the ``FixpointView`` path), else live."""
+        store is attached (the ``FixpointView`` path), else live.  Pass
+        a ``reader()`` view to pin a whole batch to one epoch."""
+        if view is not None:
+            return view.lookup(program, vertex_ids)
         if program not in self.sessions:
             raise KeyError(f"program {program!r} not served; "
                            f"have {sorted(self.sessions)}")
@@ -386,61 +604,66 @@ class GraphServer:
 
     def top_k_near(self, v: int, k: int = 8) -> list[tuple[int, float]]:
         """k highest personalized-pagerank vertices around v (v's own
-        mass included — it holds the restart probability).  Served by a
-        cached PPR session; deterministic ties break toward lower id."""
+        mass included — it holds the restart probability).  Served by
+        the LRU+TTL PPR session cache; a delta-invalidated entry is
+        repaired IN PLACE (restart-independent residual fix + warm
+        reconvergence) on first re-access.  Deterministic ties break
+        toward lower id."""
         v = int(v)
-        sess = self._ppr.get(v)
-        if sess is None:
-            if len(self._ppr) >= self._ppr_cache:
-                self._ppr.pop(next(iter(self._ppr)))
+        entry = self._ppr.get(v)
+        if entry is None:
             pcfg = dataclasses.replace(self.cfg, algorithm="pagerank")
             prog = prog_mod.get_program("pagerank", damping=self.cfg.damping,
                                         restart=v)
             sess = EngineSession(pcfg, graph=self.graph, prog=prog)
             sess.tick_until_quiescent()
-            self._ppr[v] = sess
+            entry = PPREntry(sess)
+            self._ppr.put(v, entry)
+        elif entry.pending:
+            self._repair_ppr(entry)
+        sess = entry.session
         n = self.graph.num_real_vertices
         ranks = np.asarray(sess.state.values).reshape(-1)[:n]
         order = np.lexsort((np.arange(n), -ranks))[:k]
         return [(int(i), float(ranks[i])) for i in order]
 
+    def _repair_ppr(self, entry: PPREntry,
+                    budget: Optional[int] = None) -> None:
+        """Apply every queued delta repair to a warm PPR session: the
+        residual corrections compose without intermediate ticking (each
+        re-establishes ``r = b − p + d·Pᵀp`` for its patched graph with
+        ``p`` untouched), then one reconvergence drains them all."""
+        sess = entry.session
+        for old_g, new_g, dinfo in entry.pending:
+            seeded, _ = seed_pagerank_delta(
+                sess.prog, self.cfg.damping, old_g, new_g,
+                sess.state, dinfo)
+            sess.rebind_graph(new_g)
+            sess.replace_state(seeded)
+        entry.pending.clear()
+        sess.tick_until_quiescent(budget)
+
     # -- the streaming mutation path -----------------------------------
+    def begin_delta(self, insertions=(), deletions=()) -> DeltaTransaction:
+        """Open a double-buffered delta: fork + seed shadow sessions,
+        leave the committed epoch serving.  One transaction at a time —
+        the shadow IS the next epoch, there is no third buffer."""
+        if self._txn is not None and not self._txn.committed:
+            raise RuntimeError("a delta transaction is already in flight; "
+                               "commit() it before beginning another")
+        self.deltas_started += 1
+        self._txn = DeltaTransaction(self, insertions, deletions)
+        return self._txn
+
     def apply_delta(self, insertions=(), deletions=(),
                     budget: Optional[int] = None) -> dict[str, DeltaStats]:
-        """Patch the CSR once, re-seed every session's frontier with the
-        delta-touched work, tick back to quiescence, publish."""
-        old_graph = self.graph
-        new_graph, dinfo = apply_edge_delta(
-            old_graph, insertions, deletions, seed=self._delta_seed)
-        self._delta_seed += 1
-        self.graph = new_graph
-        changed = bool(len(dinfo.inserted) + len(dinfo.deleted))
-        stats: dict[str, DeltaStats] = {}
-        for name, sess in self.sessions.items():
-            t0 = sess.totals["ticks"]
-            if not changed:
-                stats[name] = DeltaStats(name, 0, 0, False)
-                continue
-            reactivated, full = self._reseed(name, sess, old_graph,
-                                             new_graph, dinfo)
-            sess.rebase_recovery()
-            sess.tick_until_quiescent(budget)
-            stats[name] = DeltaStats(name, reactivated,
-                                     sess.totals["ticks"] - t0, full)
-        if changed:
-            # cached PPR sessions take the same residual repair (it is
-            # restart-independent) so top_k_near stays delta-fresh
-            for v, sess in self._ppr.items():
-                seeded, _ = seed_pagerank_delta(
-                    sess.prog, self.cfg.damping, old_graph, new_graph,
-                    sess.state, dinfo)
-                sess.rebind_graph(new_graph)
-                sess.replace_state(seeded)
-                sess.tick_until_quiescent(budget)
-        self.deltas_applied += 1
-        self.publish()
-        self.last_delta = stats
-        return stats
+        """Patch the CSR once, re-seed every (forked) session's frontier
+        with the delta-touched work, tick back to quiescence, commit —
+        the synchronous wrapper over begin_delta/run/commit.  Queries
+        issued concurrently keep answering from the prior epoch."""
+        txn = self.begin_delta(insertions, deletions)
+        txn.run(budget)
+        return txn.commit()
 
     def _reseed(self, name: str, sess: EngineSession,
                 old_graph: ShardedGraph, new_graph: ShardedGraph,
@@ -473,56 +696,122 @@ class GraphQuery(NamedTuple):
     kind: str  # component_of | distance | rank | top_k_near
     vertex: int
     k: int = 8
+    deadline_s: Optional[float] = None  # per-query budget override
 
 
 class QueryServer:
     """Continuous batching for point queries: fixed slots, greedy
-    refill, one vectorized store lookup per (kind, step)."""
+    refill, one vectorized store lookup per (kind, step).
 
-    def __init__(self, server: GraphServer, num_slots: int = 16):
+    Load behavior: the wait queue is the bounded
+    :class:`~repro.serve.engine.AdmissionQueue` — ``submit`` past
+    ``max_queue`` raises :class:`~repro.serve.engine.QueueFullError`
+    (typed backpressure; nothing is silently dropped).  Each query
+    carries a deadline budget (its own ``deadline_s`` or the server
+    default): a query still unanswered when it expires retires with a
+    typed :class:`~repro.serve.engine.DeadlineExceeded` answer and
+    frees its slot; queries behind it are unaffected.  Every batch is
+    answered under ONE pinned ``GraphServer.reader()`` view, so a batch
+    can never mix epoch-N and epoch-N+1 values, and the freshness lag
+    (begun-but-unabsorbed deltas at read time) is tracked per batch."""
+
+    def __init__(self, server: GraphServer, num_slots: int = 16,
+                 max_queue: Optional[int] = None,
+                 deadline_s: Optional[float] = None,
+                 clock=time.monotonic):
         self.server = server
         self.num_slots = num_slots
-        self.queue: list[GraphQuery] = []
-        self.active: dict[int, GraphQuery] = {}  # slot -> query
-        self.done: dict[int, object] = {}  # rid -> answer
+        self.deadline_s = deadline_s
+        self.clock = clock
+        self.queue = AdmissionQueue(max_queue=max_queue, clock=clock)
+        # slot -> (query, enqueued_at, absolute deadline or None)
+        self.active: dict[int, tuple[GraphQuery, float,
+                                     Optional[float]]] = {}
+        self.done: dict[int, object] = {}  # rid -> answer (typed)
         self.batches = 0
         self.served = 0
+        self.deadline_exceeded = 0
+        self.lag_last = 0
+        self.lag_max = 0
+        self._lag_sum = 0
 
     def submit(self, q: GraphQuery) -> None:
+        """Enqueue one query.  Raises ``ValueError`` on an unknown kind
+        and ``QueueFullError`` when admission is at capacity."""
         if q.kind != "top_k_near" and q.kind not in KIND_PROGRAM:
             raise ValueError(f"unknown query kind {q.kind!r}")
-        self.queue.append(q)
+        budget = q.deadline_s if q.deadline_s is not None else self.deadline_s
+        self.queue.push(q, budget)
 
     def _admit(self) -> None:
         free = [s for s in range(self.num_slots) if s not in self.active]
-        while free and self.queue:
-            self.active[free.pop(0)] = self.queue.pop(0)
+        admitted, expired = self.queue.pop_ready(len(free))
+        for q, waited in expired:
+            self.done[q.rid] = DeadlineExceeded(q.rid, q.kind, waited)
+            self.deadline_exceeded += 1
+        for (q, enq, deadline) in admitted:
+            self.active[free.pop(0)] = (q, enq, deadline)
+
+    def _expire_slots(self) -> None:
+        """Retire admitted-but-overdue queries with the typed answer —
+        slot state stays clean for the rest of the batch."""
+        now = self.clock()
+        for slot, (q, enq, deadline) in list(self.active.items()):
+            if deadline is not None and now > deadline:
+                self.done[q.rid] = DeadlineExceeded(q.rid, q.kind,
+                                                    now - enq)
+                self.deadline_exceeded += 1
+                del self.active[slot]
 
     def step(self) -> None:
         """Admit + answer one batch: every admitted query of the same
-        kind shares a single vectorized lookup."""
+        kind shares a single vectorized lookup through one pinned
+        epoch view."""
         self._admit()
+        self._expire_slots()
         if not self.active:
             return
-        by_kind: dict[str, list[tuple[int, GraphQuery]]] = {}
-        for slot, q in self.active.items():
-            by_kind.setdefault(q.kind, []).append((slot, q))
-        for kind, batch in sorted(by_kind.items()):
-            if kind == "top_k_near":
-                for _, q in batch:
-                    self.done[q.rid] = self.server.top_k_near(q.vertex, q.k)
-            else:
-                ids = np.asarray([q.vertex for _, q in batch], np.int64)
-                vals = self.server.lookup(KIND_PROGRAM[kind], ids)
-                for (_, q), val in zip(batch, vals):
-                    self.done[q.rid] = (float(val)
-                                        if vals.dtype.kind == "f"
-                                        else int(val))
+        by_kind: dict[str, list[GraphQuery]] = {}
+        for q, _, _ in self.active.values():
+            by_kind.setdefault(q.kind, []).append(q)
+        with self.server.reader() as view:
+            lag = self.server.freshness_lag(view)
+            for kind, batch in sorted(by_kind.items()):
+                if kind == "top_k_near":
+                    for q in batch:
+                        self.done[q.rid] = self.server.top_k_near(q.vertex,
+                                                                 q.k)
+                else:
+                    ids = np.asarray([q.vertex for q in batch], np.int64)
+                    vals = self.server.lookup(KIND_PROGRAM[kind], ids,
+                                              view=view)
+                    for q, val in zip(batch, vals):
+                        self.done[q.rid] = (float(val)
+                                            if vals.dtype.kind == "f"
+                                            else int(val))
         self.served += len(self.active)
+        self.lag_last = lag
+        self.lag_max = max(self.lag_max, lag)
+        self._lag_sum += lag
         self.active.clear()
         self.batches += 1
 
     def run(self) -> dict[int, object]:
-        while self.queue or self.active:
+        while len(self.queue) or self.active:
             self.step()
         return self.done
+
+    def stats(self) -> dict:
+        """Backpressure / deadline / freshness snapshot (plus the PPR
+        cache counters, which this server's ``top_k_near`` traffic
+        drives)."""
+        return {"submitted": self.queue.submitted,
+                "rejected": self.queue.rejected,
+                "deadline_exceeded": self.deadline_exceeded,
+                "served": self.served, "batches": self.batches,
+                "queued": len(self.queue),
+                "freshness_lag_last": self.lag_last,
+                "freshness_lag_max": self.lag_max,
+                "freshness_lag_mean": (self._lag_sum / self.batches
+                                       if self.batches else 0.0),
+                "ppr_cache": self.server.ppr_cache.stats()}

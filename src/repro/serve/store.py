@@ -16,7 +16,16 @@ module persists a converged ``EngineState``'s ``values`` (and push-mode
     store and the engine can never disagree on ownership;
   * epochs — every publish is a new epoch; streaming deltas re-publish
     and old epochs are retained (``keep``) then garbage-collected, so a
-    reader holding an epoch open never sees a torn update.
+    reader holding an epoch open never sees a torn update;
+  * reader pinning — ``FixpointView`` loads shard files LAZILY, so a
+    long-lived view is a promise to read files that keep-N GC would
+    otherwise be free to delete (keep=2 with three publishes during one
+    read used to pull ``epoch_N`` out from under the reader).  Views
+    therefore pin their epoch on open; ``_gc`` skips pinned epochs, and
+    ``close()`` releases the pin and sweeps.  Pin state is refcounted
+    and lock-guarded, so concurrent readers and a publisher thread
+    compose (the double-buffered serving path in ``serve/graph.py``
+    holds epoch N open for queries while epoch N+1 is being ticked).
 
 ``FixpointView`` is the read handle: per-(program, shard) files load
 lazily and cache, so a point query touches exactly the shards its
@@ -27,6 +36,7 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import threading
 import time
 from typing import Optional
 
@@ -42,7 +52,36 @@ class FixpointStore:
     def __init__(self, directory: str, keep: int = 2):
         self.dir = directory
         self.keep = keep
+        self._lock = threading.RLock()
+        self._pins: dict[int, int] = {}  # epoch -> reader refcount
         os.makedirs(directory, exist_ok=True)
+
+    # -- reader pinning ------------------------------------------------
+    def pin(self, epoch: int) -> bool:
+        """Take a GC pin on ``epoch``.  Returns False (no pin taken) if
+        the epoch is no longer committed on disk — the caller should
+        retry against a newer epoch."""
+        with self._lock:
+            if not os.path.exists(os.path.join(
+                    self.dir, f"epoch_{epoch:010d}", "manifest.json")):
+                return False
+            self._pins[epoch] = self._pins.get(epoch, 0) + 1
+            return True
+
+    def unpin(self, epoch: int) -> None:
+        """Release one pin; the last release sweeps GC so an epoch held
+        open past its retention window is collected promptly."""
+        with self._lock:
+            left = self._pins.get(epoch, 0) - 1
+            if left > 0:
+                self._pins[epoch] = left
+                return
+            self._pins.pop(epoch, None)
+            self._gc()
+
+    def pinned(self) -> set[int]:
+        with self._lock:
+            return {e for e, n in self._pins.items() if n > 0}
 
     # ------------------------------------------------------------------
     def publish(self, fixpoints: dict[str, dict], part: VertexPartition,
@@ -88,9 +127,17 @@ class FixpointStore:
         return epoch
 
     def _gc(self) -> None:
-        for e in self.epochs()[: -self.keep]:
-            shutil.rmtree(os.path.join(self.dir, f"epoch_{e:010d}"),
-                          ignore_errors=True)
+        """Keep-N retention, EXCEPT epochs a live reader has pinned: a
+        lazily-loading view must be able to finish its read no matter
+        how many publishes land while it is open.  The skipped epoch is
+        collected by the pin-release sweep in :meth:`unpin`."""
+        with self._lock:
+            pinned = self.pinned()
+            for e in self.epochs()[: -self.keep]:
+                if e in pinned:
+                    continue
+                shutil.rmtree(os.path.join(self.dir, f"epoch_{e:010d}"),
+                              ignore_errors=True)
 
     # ------------------------------------------------------------------
     def epochs(self) -> list[int]:
@@ -106,27 +153,52 @@ class FixpointStore:
         return es[-1] if es else None
 
     def view(self, epoch: Optional[int] = None) -> "FixpointView":
-        epoch = epoch if epoch is not None else self.latest_epoch()
-        if epoch is None:
-            raise FileNotFoundError(f"no committed epoch in {self.dir}")
+        """Open a pinned read handle on ``epoch`` (default: latest).
+        The view holds a GC pin until :meth:`FixpointView.close` — a
+        reader's lazy shard loads can never race epoch retention."""
+        with self._lock:
+            epoch = epoch if epoch is not None else self.latest_epoch()
+            if epoch is None:
+                raise FileNotFoundError(f"no committed epoch in {self.dir}")
+            if not self.pin(epoch):
+                raise FileNotFoundError(
+                    f"epoch {epoch} is no longer committed in {self.dir}")
         d = os.path.join(self.dir, f"epoch_{epoch:010d}")
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
-        return FixpointView(d, manifest)
+        return FixpointView(d, manifest, store=self)
 
 
 class FixpointView:
     """Lazy read handle on one committed epoch: per-(program, shard)
     files load on first touch and cache, so batched point queries do
-    shard-local gathers only where their vertices actually live."""
+    shard-local gathers only where their vertices actually live.
 
-    def __init__(self, directory: str, manifest: dict):
+    Opened through :meth:`FixpointStore.view` the handle owns one GC
+    pin on its epoch; release it with :meth:`close` (idempotent, also a
+    context manager) once the reader is done."""
+
+    def __init__(self, directory: str, manifest: dict,
+                 store: Optional[FixpointStore] = None):
         self.dir = directory
         self.manifest = manifest
         self.epoch = int(manifest["epoch"])
         self.part = vertex_partition(int(manifest["num_vertices"]),
                                      int(manifest["num_shards"]))
         self._cache: dict[tuple[str, int], dict[str, np.ndarray]] = {}
+        self._store = store
+
+    def close(self) -> None:
+        """Release this view's GC pin (idempotent)."""
+        store, self._store = self._store, None
+        if store is not None:
+            store.unpin(self.epoch)
+
+    def __enter__(self) -> "FixpointView":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     @property
     def programs(self) -> list[str]:

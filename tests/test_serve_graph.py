@@ -296,7 +296,7 @@ class TestPersonalizedPagerank:
         g_plain = dataclasses.replace(srv.graph, weights=None)
         oracle = _dense_ppr(g_plain, cfg.damping, b)
         ranks = np.asarray(
-            srv._ppr[v].state.values).reshape(-1)[:n]
+            srv.ppr_cache.peek(v).session.state.values).reshape(-1)[:n]
         assert np.abs(ranks - oracle).max() < 1e-3
         order = np.lexsort((np.arange(n), -oracle))[:6]
         assert [i for i, _ in top] == list(order)

@@ -1,0 +1,505 @@
+"""Serving under load: double-buffered delta epochs, reader-pinned GC,
+admission control / deadlines, and the LRU+TTL PPR cache.
+
+The load-bearing piece is the concurrency property harness: a delta
+transaction ticks shadow sessions toward epoch N+1 while query batches
+keep reading through pinned views — every batch must be consistent with
+*some* committed epoch (bitwise: never a mix of pre- and post-delta
+values), the freshness lag must read 1 exactly while the transaction is
+in flight, and the first post-commit batch must see exactly the N+1
+fixpoint (== a from-scratch run on the patched graph).  Plus the GC
+regression the lazy view exposed: keep-N retention used to delete an
+epoch a long-lived reader still held open.
+"""
+import dataclasses
+import tempfile
+
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hermetic envs: deterministic seed-grid fallback
+    from _propshim import given, settings, strategies as st
+
+from repro.configs.base import GraphConfig
+from repro.core import engine as E
+from repro.core import graph as G
+from repro.core import programs as prog_mod
+from repro.dist.sharding import vertex_partition
+from repro.serve.cache import LRUTTLCache
+from repro.serve.engine import (AdmissionQueue, DeadlineExceeded,
+                                QueueFullError)
+from repro.serve.graph import GraphQuery, GraphServer, QueryServer
+from repro.serve.store import FixpointStore
+
+
+def _cfg(**kw):
+    base = dict(name="t-load", algorithm="cc", num_vertices=128,
+                avg_degree=4, num_shards=4, seed=5, max_ticks=30000,
+                enforce_fraction=1.0)
+    base.update(kw)
+    return GraphConfig(**base)
+
+
+class FakeClock:
+    """Injectable clock for TTL / deadline determinism."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def _same(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Bitwise-or-both-inf elementwise equality (sssp unreached = inf)."""
+    a, b = np.asarray(a), np.asarray(b)
+    if a.dtype.kind == "f":
+        return (a == b) | (np.isnan(a) & np.isnan(b)) | \
+            (np.isinf(a) & np.isinf(b) & (np.sign(a) == np.sign(b)))
+    return a == b
+
+
+# ======================================================================
+# LRU + TTL cache units
+# ======================================================================
+class TestLRUTTLCache:
+    def test_lru_eviction_order(self):
+        clock = FakeClock()
+        c = LRUTTLCache(capacity=3, clock=clock)
+        c.put("a", 1)
+        c.put("b", 2)
+        c.put("c", 3)
+        assert c.get("a") == 1  # refresh a: b is now LRU
+        c.put("d", 4)
+        assert c.evictions == 1
+        assert "b" not in c and "a" in c and "c" in c and "d" in c
+        c.put("e", 5)  # c is LRU now (a was refreshed)
+        assert "c" not in c and "a" in c
+        assert c.evictions == 2
+
+    def test_ttl_expiry_with_injected_clock(self):
+        clock = FakeClock()
+        c = LRUTTLCache(capacity=4, ttl=10.0, clock=clock)
+        c.put("a", 1)
+        clock.advance(11.0)
+        assert c.get("a") is None
+        assert c.expirations == 1 and c.misses == 1
+        # get() refreshes the idle stamp: a hot entry never idles out
+        c.put("b", 2)
+        clock.advance(6.0)
+        assert c.get("b") == 2
+        clock.advance(6.0)  # 12s since put, 6s since last access
+        assert c.get("b") == 2
+        assert c.expirations == 1
+
+    def test_counter_accuracy(self):
+        clock = FakeClock()
+        c = LRUTTLCache(capacity=2, ttl=5.0, clock=clock)
+        assert c.get("x") is None  # miss
+        c.put("x", 0)
+        assert c.get("x") == 0  # hit
+        assert c.get("x") == 0  # hit
+        c.put("y", 1)
+        c.put("z", 2)  # x is LRU (y was inserted after x's last access)
+        assert "x" not in c and "y" in c
+        clock.advance(6.0)
+        assert c.get("z") is None  # expired -> miss + expiration
+        s = c.stats()
+        assert (s["hits"], s["misses"]) == (2, 2)
+        assert s["evictions"] == 1 and s["expirations"] == 1
+        assert abs(s["hit_rate"] - 0.5) < 1e-12
+
+    def test_invalidate_keeps_entries_warm(self):
+        c = LRUTTLCache(capacity=4)
+        entries = {k: [] for k in "abc"}
+        for k, v in entries.items():
+            c.put(k, v)
+        marked = c.invalidate(lambda v: v.append("stale"))
+        assert marked == 3 and c.invalidations == 3
+        assert len(c) == 3  # nothing dropped
+        assert all(v == ["stale"] for v in entries.values())
+
+    def test_sweep_and_peek(self):
+        clock = FakeClock()
+        c = LRUTTLCache(capacity=4, ttl=1.0, clock=clock)
+        c.put("a", 1)
+        c.put("b", 2)
+        clock.advance(2.0)
+        c.put("c", 3)
+        assert c.peek("a") is None  # expired reads absent, not dropped
+        assert len(c) == 3
+        assert c.sweep() == 2
+        assert len(c) == 1 and c.peek("c") == 3
+        assert c.hits == 0 and c.misses == 0  # peek/sweep are silent
+
+
+# ======================================================================
+# Reader-pinned GC (the FixpointStore regression)
+# ======================================================================
+class TestReaderPinnedGC:
+    def _publish(self, store, part, i):
+        return store.publish(
+            {"cc": {"values": np.full((part.num_shards, part.vs), i,
+                                      np.int32)}}, part)
+
+    def test_gc_skips_pinned_epoch_mid_read(self, tmp_path):
+        """keep=2 with >2 publishes during one read: the lazily-open
+        view's epoch survives, lookups succeed mid-GC, and the
+        pin-release sweep collects it afterwards."""
+        part = vertex_partition(64, 2)
+        store = FixpointStore(str(tmp_path), keep=2)
+        e1 = self._publish(store, part, 1)
+        view = store.view(e1)  # lazy: no shard file read yet
+        for i in range(2, 6):
+            self._publish(store, part, i)
+        assert store.epochs() == [e1, 4, 5]  # e1 pinned, 2..3 collected
+        got = view.lookup("cc", [0, 13, 63])  # first touch happens NOW
+        assert (got == 1).all()
+        view.close()
+        assert store.epochs() == [4, 5]  # pin-release sweep collected e1
+
+    def test_pin_refcounts(self, tmp_path):
+        part = vertex_partition(16, 2)
+        store = FixpointStore(str(tmp_path), keep=1)
+        e1 = self._publish(store, part, 1)
+        v1, v2 = store.view(e1), store.view(e1)
+        self._publish(store, part, 2)
+        v1.close()
+        assert e1 in store.epochs()  # v2 still holds it
+        v2.close()
+        assert e1 not in store.epochs()
+        v2.close()  # idempotent
+
+    def test_pin_missing_epoch_refused(self, tmp_path):
+        part = vertex_partition(16, 2)
+        store = FixpointStore(str(tmp_path), keep=1)
+        e1 = self._publish(store, part, 1)
+        self._publish(store, part, 2)
+        assert not store.pin(e1)  # collected: no pin taken
+        try:
+            store.view(e1)
+            assert False, "view on a collected epoch must raise"
+        except FileNotFoundError:
+            pass
+
+    def test_server_double_buffer_keeps_prev_epoch(self, tmp_path):
+        """Even at keep_epochs=1 the server's flip protocol holds the
+        previous epoch open (double buffer), releasing it only on the
+        flip after next."""
+        srv = GraphServer(_cfg(num_vertices=64, num_shards=2),
+                          programs=("cc",), store_dir=str(tmp_path),
+                          keep_epochs=1)
+        srv.converge()  # epoch 1
+        e1 = srv.epoch
+        srv.apply_delta(insertions=[(0, 33)])  # epoch 2
+        assert srv.store.epochs() == [e1, srv.epoch]  # both live
+        srv.apply_delta(insertions=[(1, 40)])  # epoch 3: e1 released
+        assert srv.store.epochs() == [srv.epoch - 1, srv.epoch]
+
+
+# ======================================================================
+# Admission control + deadlines
+# ======================================================================
+class TestAdmissionQueue:
+    def test_expired_never_blocks_live(self):
+        clock = FakeClock()
+        q = AdmissionQueue(max_queue=4, clock=clock)
+        q.push("old", deadline_s=1.0)
+        q.push("live")
+        clock.advance(2.0)
+        admitted, expired = q.pop_ready(1)
+        assert [i for i, _, _ in admitted] == ["live"]
+        assert [i for i, _ in expired] == ["old"]
+        assert abs(expired[0][1] - 2.0) < 1e-9  # waited_s
+
+    def test_bound(self):
+        q = AdmissionQueue(max_queue=2)
+        q.push(1)
+        q.push(2)
+        try:
+            q.push(3)
+            assert False, "push past max_queue must raise"
+        except QueueFullError as e:
+            assert e.max_queue == 2
+        assert (q.submitted, q.rejected, len(q)) == (2, 1, 2)
+
+
+class TestQueryServerAdmission:
+    def _server(self):
+        srv = GraphServer(_cfg(num_vertices=64, num_shards=2),
+                          programs=("cc",))
+        srv.converge()
+        return srv
+
+    def test_queue_full_is_typed_and_slot_state_stays_clean(self):
+        srv = self._server()
+        qs = QueryServer(srv, num_slots=2, max_queue=3)
+        for rid in range(3):
+            qs.submit(GraphQuery(rid, "component_of", rid))
+        try:
+            qs.submit(GraphQuery(99, "component_of", 0))
+            assert False, "4th submit must be rejected"
+        except QueueFullError:
+            pass
+        done = qs.run()
+        assert sorted(done) == [0, 1, 2]  # the rejected rid never ran
+        assert qs.served == 3
+        # subsequent traffic is unaffected by the rejection
+        qs.submit(GraphQuery(7, "component_of", 5))
+        qs.step()
+        assert done[7] == int(srv.component_of(5)[0])
+        s = qs.stats()
+        assert s["rejected"] == 1 and s["submitted"] == 4
+        assert s["deadline_exceeded"] == 0 and s["queued"] == 0
+
+    def test_deadline_exceeded_is_typed_and_counted(self):
+        srv = self._server()
+        clock = FakeClock()
+        qs = QueryServer(srv, num_slots=4, deadline_s=1.0, clock=clock)
+        qs.submit(GraphQuery(0, "component_of", 1))
+        qs.submit(GraphQuery(1, "component_of", 2, deadline_s=10.0))
+        clock.advance(2.0)  # rid 0 overdue; rid 1's override survives
+        qs.step()
+        assert isinstance(qs.done[0], DeadlineExceeded)
+        assert qs.done[0].rid == 0 and qs.done[0].kind == "component_of"
+        assert abs(qs.done[0].waited_s - 2.0) < 1e-9
+        assert qs.done[1] == int(srv.component_of(2)[0])
+        assert qs.deadline_exceeded == 1 and qs.served == 1
+        # fresh query after the expiry: slots are clean
+        qs.submit(GraphQuery(2, "component_of", 3))
+        qs.step()
+        assert qs.done[2] == int(srv.component_of(3)[0])
+        assert qs.stats()["deadline_exceeded"] == 1
+
+    def test_admitted_query_expires_in_slot(self):
+        srv = self._server()
+        clock = FakeClock()
+        qs = QueryServer(srv, num_slots=2, deadline_s=1.0, clock=clock)
+        qs.submit(GraphQuery(0, "component_of", 1))
+        qs._admit()  # sits in a slot...
+        clock.advance(5.0)  # ...past its deadline
+        qs.submit(GraphQuery(1, "component_of", 2))
+        qs.submit(GraphQuery(2, "component_of", 3))  # needs rid 0's slot
+        qs.step()
+        qs.run()
+        assert isinstance(qs.done[0], DeadlineExceeded)
+        assert qs.done[1] == int(srv.component_of(2)[0])
+        assert qs.done[2] == int(srv.component_of(3)[0])
+        assert qs.deadline_exceeded == 1 and qs.served == 2
+
+
+# ======================================================================
+# The concurrency property harness (double-buffered epochs)
+# ======================================================================
+HARNESS_PROGRAMS = ("cc", "sssp", "pagerank")
+HARNESS_KINDS = ("insert", "delete")
+HARNESS_SCHEDULES = ("sync", "async")
+
+
+def _random_delta(rng, graph, kind):
+    n = graph.num_real_vertices
+    if kind == "insert":
+        return ([(int(rng.integers(n)), int(rng.integers(n)))
+                 for _ in range(int(rng.integers(1, 4)))], [])
+    edges = G.edge_list(graph)
+    picks = rng.choice(len(edges), size=int(rng.integers(1, 3)),
+                       replace=False)
+    return [], [tuple(edges[i]) for i in picks]
+
+
+def _scratch_values(cfg, graph):
+    state, totals = E.run_to_convergence(cfg, graph=graph)
+    assert totals["converged"], (cfg.algorithm, totals["ticks"])
+    return np.asarray(state.values).reshape(-1)
+
+
+def _check_interleaved(srv, program, cfg, rng, kind):
+    """Core harness body: converge, snapshot epoch N, interleave a
+    query batch between every shadow tick of one delta transaction,
+    then verify the flip."""
+    srv.converge()
+    n = srv.graph.num_real_vertices
+    ids = np.arange(n)
+    with srv.reader() as view:
+        snap_n = np.asarray(srv.lookup(program, ids, view=view)).copy()
+        assert srv.freshness_lag(view) == 0
+
+    ins, dele = _random_delta(rng, srv.graph, kind)
+    txn = srv.begin_delta(insertions=ins, deletions=dele)
+    qs = QueryServer(srv, num_slots=8)
+    rid = 0
+    mid_batches = 0
+    while not txn.done:
+        # a full-coverage batch through one pinned reader: must be
+        # EXACTLY the epoch-N values — no torn mix with the shadow
+        with srv.reader() as view:
+            got = np.asarray(srv.lookup(program, ids, view=view))
+            assert srv.freshness_lag(view) == 1
+        assert _same(got, snap_n).all(), (
+            program, kind, int(np.count_nonzero(~_same(got, snap_n))))
+        # and the slot-batched path agrees query-by-query
+        verts = rng.integers(0, n, size=4)
+        for v in verts:
+            qs.submit(GraphQuery(rid, _KIND[program], int(v)))
+            rid += 1
+        qs.step()
+        for q_rid, v in zip(range(rid - 4, rid), verts):
+            assert _same(np.asarray(qs.done[q_rid]), snap_n[v]).all()
+        assert qs.lag_last == 1
+        mid_batches += 1
+        txn.step(1)
+    stats = txn.commit()
+
+    # post-flip: exactly the N+1 fixpoint, lag back to 0
+    with srv.reader() as view:
+        snap_n1 = np.asarray(srv.lookup(program, ids, view=view)).copy()
+        assert srv.freshness_lag(view) == 0
+    scratch = _scratch_values(
+        dataclasses.replace(cfg, schedule="sync"), srv.graph)[:n]
+    if program == "pagerank":
+        prog = srv.sessions[program].prog
+        tol = n * prog.push_eps / (1 - cfg.damping)
+        assert np.abs(snap_n1 - scratch).max() <= tol, (stats,)
+    else:
+        assert _same(snap_n1, scratch).all(), (stats,)
+    if stats[program].reactivated:
+        assert mid_batches > 0  # the interleaving actually interleaved
+    return snap_n, snap_n1
+
+
+_KIND = {"cc": "component_of", "sssp": "distance", "pagerank": "rank"}
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from(HARNESS_PROGRAMS),
+       st.sampled_from(HARNESS_KINDS), st.sampled_from(HARNESS_SCHEDULES))
+def test_no_torn_reads_store_backed(seed, program, kind, schedule):
+    rng = np.random.default_rng(seed)
+    cfg = _cfg(algorithm=program, seed=seed % 17,
+               num_vertices=int(rng.choice([64, 96])),
+               weighted=(program == "sssp"), schedule=schedule)
+    with tempfile.TemporaryDirectory() as d:
+        srv = GraphServer(cfg, programs=(program,), store_dir=d,
+                          schedule=schedule)
+        _check_interleaved(srv, program, cfg, rng, kind)
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from(HARNESS_PROGRAMS))
+def test_no_torn_reads_live_mode(seed, program):
+    """Store-less servers get the same guarantee from the session
+    double buffer alone: primaries are untouched until commit (this
+    test FAILS against in-place delta reseeding)."""
+    rng = np.random.default_rng(seed)
+    cfg = _cfg(algorithm=program, seed=seed % 11, num_vertices=64,
+               weighted=(program == "sssp"))
+    srv = GraphServer(cfg, programs=(program,))
+    _check_interleaved(srv, program, cfg, rng, "insert")
+
+
+def test_one_transaction_at_a_time():
+    srv = GraphServer(_cfg(num_vertices=64, num_shards=2),
+                      programs=("cc",))
+    srv.converge()
+    txn = srv.begin_delta(insertions=[(0, 33)])
+    try:
+        srv.begin_delta(insertions=[(1, 40)])
+        assert False, "second begin_delta must be refused"
+    except RuntimeError:
+        pass
+    if txn.changed and not txn.done:
+        try:
+            txn.commit()  # not quiescent yet (seeded frontier pending)
+            assert False, "commit before quiescence must be refused"
+        except RuntimeError:
+            pass
+    txn.run()
+    stats = txn.commit()
+    if txn.changed:
+        assert stats["cc"].reactivated >= 1
+    # the slot is free again
+    srv.apply_delta(insertions=[(2, 50)])
+    n = srv.graph.num_real_vertices
+    assert np.array_equal(srv.component_of(np.arange(n)),
+                          G.cc_oracle(n, G.edge_list(srv.graph)))
+
+
+# ======================================================================
+# Hot PPR sessions survive deltas warm (invalidate-not-drop)
+# ======================================================================
+class TestWarmPPRAcrossDelta:
+    def test_hot_restart_vertex_reuses_repaired_session(self):
+        cfg = _cfg(num_vertices=64, avg_degree=3, seed=4)
+        srv = GraphServer(cfg, programs=("cc",))
+        srv.converge()
+        v = 3
+        srv.top_k_near(v, k=4)  # build (miss)
+        entry = srv.ppr_cache.peek(v)
+        built = entry.session
+        build_ticks = built.totals["ticks"]
+        assert srv.ppr_cache.misses == 1
+
+        srv.apply_delta(insertions=[(v, 40)])
+        # invalidated, NOT dropped: entry still cached, marked stale
+        assert len(srv.ppr_cache) == 1
+        assert len(entry.pending) == 1
+
+        top = srv.top_k_near(v, k=4)  # hit -> in-place repair
+        assert srv.ppr_cache.hits >= 1
+        assert srv.ppr_cache.peek(v).session is built  # same warm session
+        assert not entry.pending
+        repair_ticks = built.totals["ticks"] - build_ticks
+
+        # correctness: matches a from-scratch PPR on the patched graph
+        pcfg = dataclasses.replace(cfg, algorithm="pagerank")
+        prog = prog_mod.get_program("pagerank", damping=cfg.damping,
+                                    restart=v)
+        scratch = E.EngineSession(pcfg, graph=srv.graph, prog=prog)
+        scratch.tick_until_quiescent()
+        n = srv.graph.num_real_vertices
+        tol = n * prog.push_eps / (1 - cfg.damping)
+        gap = np.abs(np.asarray(built.state.values)
+                     - np.asarray(scratch.state.values)).max()
+        assert gap <= tol
+        # economy: the warm repair is strictly cheaper than reconverging
+        assert repair_ticks < scratch.totals["ticks"], (
+            repair_ticks, scratch.totals["ticks"])
+        assert dict(top)  # answers flow
+
+    def test_stacked_deltas_compose_on_one_warm_session(self):
+        cfg = _cfg(num_vertices=64, avg_degree=3, seed=9)
+        srv = GraphServer(cfg, programs=("cc",))
+        srv.converge()
+        v = 7
+        srv.top_k_near(v, k=4)
+        entry = srv.ppr_cache.peek(v)
+        srv.apply_delta(insertions=[(v, 40)])
+        srv.apply_delta(insertions=[(12, 50)])  # two pending repairs
+        assert len(entry.pending) == 2
+        srv.top_k_near(v, k=4)  # one access drains both
+        assert not entry.pending
+        pcfg = dataclasses.replace(cfg, algorithm="pagerank")
+        prog = prog_mod.get_program("pagerank", damping=cfg.damping,
+                                    restart=v)
+        scratch = E.EngineSession(pcfg, graph=srv.graph, prog=prog)
+        scratch.tick_until_quiescent()
+        n = srv.graph.num_real_vertices
+        tol = n * prog.push_eps / (1 - cfg.damping)
+        gap = np.abs(np.asarray(entry.session.state.values)
+                     - np.asarray(scratch.state.values)).max()
+        assert gap <= tol
+
+    def test_ttl_expired_session_rebuilds(self):
+        clock = FakeClock()
+        cfg = _cfg(num_vertices=48, avg_degree=3, seed=2, num_shards=2)
+        srv = GraphServer(cfg, programs=("cc",), ppr_ttl=30.0, clock=clock)
+        srv.converge()
+        srv.top_k_near(1, k=3)
+        clock.advance(31.0)
+        srv.top_k_near(1, k=3)  # idled out -> rebuilt
+        assert srv.ppr_cache.expirations == 1
+        assert srv.ppr_cache.misses == 2
