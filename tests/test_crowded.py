@@ -122,7 +122,8 @@ class TestDelayedExchange:
         same rows (padded with empties) as the immediate exchange."""
         codec = X.make_wire_codec(num_shards=2, capacity=4, vs=32,
                                   requested="int16", value_kind="int32",
-                                  identity=2 ** 31 - 1, max_int_value=32)
+                                  identity=2 ** 31 - 1, max_int_value=32,
+                                  idempotent=True)
         inf = 2 ** 31 - 1
         rng = np.random.default_rng(0)
         sv = jnp.asarray(rng.integers(0, 32, (2, 2, 4)), jnp.int32)
@@ -143,7 +144,8 @@ class TestDelayedExchange:
         delivery tick by tick (1-device mesh)."""
         codec = X.make_wire_codec(num_shards=1, capacity=8, vs=64,
                                   requested="int16", value_kind="int32",
-                                  identity=2 ** 31 - 1, max_int_value=64)
+                                  identity=2 ** 31 - 1, max_int_value=64,
+                                  idempotent=True)
         inf = 2 ** 31 - 1
         ring_l = X.init_delay_ring(2, 1, 1, 8, inf, jnp.int32)
         ring_d = X.init_delay_ring(2, 0, 1, 8, inf, jnp.int32)

@@ -179,7 +179,9 @@ class TestReaderPinnedGC:
         store = FixpointStore(str(tmp_path), keep=1)
         e1 = self._publish(store, part, 1)
         self._publish(store, part, 2)
-        assert not store.pin(e1)  # collected: no pin taken
+        # negative-path probe: the pin is *refused* (epoch already
+        # collected), so there is no pin to release
+        assert not store.pin(e1)  # asymplint: disable=pin-balance
         try:
             store.view(e1)
             assert False, "view on a collected epoch must raise"

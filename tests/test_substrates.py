@@ -272,7 +272,7 @@ class TestExchange:
         with pytest.raises(ValueError):
             X.make_wire_codec(num_shards=2, capacity=4, vs=8,
                               requested="gzip", value_kind="int32",
-                              identity=0)
+                              identity=0, idempotent=True)
 
     def test_float_wire_never_underestimates(self):
         """Ceil-rounded quantization: decoded >= original (min-semiring
@@ -285,7 +285,8 @@ class TestExchange:
         for mode in ("int8", "int16"):
             codec = X.make_wire_codec(num_shards=5, capacity=16, vs=100,
                                       requested=mode, value_kind="float32",
-                                      identity=float("inf"))
+                                      identity=float("inf"),
+                                      idempotent=True)
             rv, ri = X.exchange_local(codec, vals, ids)
             ref = jnp.swapaxes(vals, 0, 1)
             assert bool(jnp.all(jnp.isinf(rv) == jnp.isinf(ref)))
@@ -304,7 +305,8 @@ class TestExchange:
         from repro.dist.compat import shard_map
         codec = X.make_wire_codec(num_shards=1, capacity=8, vs=64,
                                   requested="int16", value_kind="int32",
-                                  identity=2 ** 31 - 1, max_int_value=64)
+                                  identity=2 ** 31 - 1, max_int_value=64,
+                                  idempotent=True)
         sv = jnp.full((1, 1, 8), 2 ** 31 - 1, jnp.int32
                       ).at[0, 0, :3].set(jnp.asarray([5, 63, 0]))
         si = jnp.full((1, 1, 8), -1, jnp.int32).at[0, 0, :3].set(

@@ -1,0 +1,10 @@
+"""Repo tooling: static analysis and CI gates that run without jax.
+
+Every tool in this package follows one convention (``tools/report.py``):
+findings carry a severity, failing severities are ``ERROR``/``DRIFT``,
+and ``main()`` returns ``EXIT_OK`` / ``EXIT_FINDINGS`` / ``EXIT_USAGE``.
+
+  * ``tools.asymplint``       — repo-specific AST lint (bug classes -> rules)
+  * ``tools/bench_diff.py``   — perf-trajectory gate over BENCH_*.json
+  * ``tools/check_docs_links.py`` — docs cross-reference checker
+"""

@@ -1,0 +1,30 @@
+"""asymplint: this repo's bug history, compiled into AST rules.
+
+Every rule encodes an invariant that already produced a real runtime bug
+(CHANGES.md, PRs 4-9) or a layer contract the type system can't see:
+exactly-once SUM delivery, lossy-wire refusal for non-idempotent
+aggregators, device-tick keying of async firing patterns, reader-pinned
+epoch GC.  The analyzer is stdlib-``ast`` only — no jax import — so it
+runs before the toolchain is installed.
+
+    python -m tools.asymplint src tests benchmarks
+
+Findings can be silenced two ways, both validated for staleness:
+
+  * inline, on the offending line or the line above::
+
+        codec = make_codec(...)  # asymplint: disable=wire-gate
+
+    a suppression that no longer matches a finding is itself an ERROR
+    (``stale-suppression``);
+  * grandfathered, via the committed baseline
+    (``tools/asymplint/baseline.json``) — entries pin the source line
+    text, so a moved/fixed line turns the entry stale (ERROR) and an
+    entry whose finding disappeared is a shrink opportunity (WARN).
+"""
+from tools.asymplint.engine import (Finding, LintResult, lint_paths,
+                                    lint_source)
+from tools.asymplint.rules import RULES, rule_infos
+
+__all__ = ["Finding", "LintResult", "RULES", "lint_paths", "lint_source",
+           "rule_infos"]

@@ -1,0 +1,5 @@
+"""Entry point: ``python -m tools.asymplint [paths...]``."""
+from tools.asymplint.cli import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

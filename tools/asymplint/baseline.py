@@ -1,0 +1,135 @@
+"""Grandfathered findings: load/save/match, with staleness teeth.
+
+A baseline entry pins four things: rule, path, line, and the *stripped
+source text* of the offending line, plus a human justification.  The
+text pin is what gives the file teeth:
+
+  * file gone, or the pinned text no longer anywhere in it -> the entry
+    is **stale** (ERROR) — the code moved or was fixed, so the entry is
+    dead weight that would mask a future regression at the same spot;
+  * text still present but no current finding matches -> **shrink**
+    opportunity (WARN) — the violation was fixed, delete the entry.
+
+Matching is by (rule, path, text), not line number, so a pure line
+shift (code added above) neither fails CI nor silently widens the
+grandfathered set.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import asdict, dataclass
+
+from tools import report
+from tools.asymplint import config
+
+VERSION = 1
+
+
+@dataclass(frozen=True)
+class Entry:
+    rule: str
+    path: str
+    line: int
+    text: str            # stripped source of the offending line
+    justification: str
+
+    def key(self) -> tuple[str, str, str]:
+        return (self.rule, self.path, self.text)
+
+
+def load(path: str) -> list[Entry]:
+    if not os.path.exists(path):
+        return []
+    with open(path, encoding="utf-8") as fh:
+        doc = json.load(fh)
+    if doc.get("version") != VERSION:
+        raise ValueError(f"{path}: unsupported baseline version "
+                         f"{doc.get('version')!r} (want {VERSION})")
+    return [Entry(**e) for e in doc.get("entries", [])]
+
+
+def save(entries: list[Entry], path: str) -> None:
+    doc = {"version": VERSION,
+           "entries": [asdict(e) for e in
+                       sorted(entries, key=lambda e: (e.path, e.line,
+                                                      e.rule))]}
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+
+
+def from_findings(findings, root: str,
+                  justification: str = "grandfathered") -> list[Entry]:
+    entries = []
+    for f in findings:
+        full = os.path.join(root, f.path)
+        text = ""
+        if os.path.exists(full):
+            with open(full, encoding="utf-8") as fh:
+                lines = fh.read().splitlines()
+            if 1 <= f.line <= len(lines):
+                text = lines[f.line - 1].strip()
+        entries.append(Entry(rule=f.rule, path=f.path, line=f.line,
+                             text=text, justification=justification))
+    return entries
+
+
+def validate(entries: list[Entry], root: str) -> list[report.Finding]:
+    """Staleness only — no lint run needed (CI's pre-install check)."""
+    out = []
+    for e in entries:
+        full = os.path.join(root, e.path)
+        if not os.path.exists(full):
+            out.append(report.Finding(
+                report.ERROR, f"baseline entry for missing file "
+                f"(rule {e.rule}) — the code is gone, delete the entry",
+                path=e.path, line=e.line, rule=config.STALE_BASELINE))
+            continue
+        with open(full, encoding="utf-8") as fh:
+            stripped = {ln.strip() for ln in fh.read().splitlines()}
+        if e.text not in stripped:
+            out.append(report.Finding(
+                report.ERROR, f"baseline entry pins text no longer in "
+                f"the file (rule {e.rule}): {e.text!r} — re-baseline or "
+                "delete", path=e.path, line=e.line,
+                rule=config.STALE_BASELINE))
+    return out
+
+
+def apply(findings, entries: list[Entry], root: str):
+    """Split findings into (new, grandfathered) + baseline health.
+
+    Returns ``(new_findings, grandfathered, health)`` where health
+    contains stale-entry ERRORs and shrink WARNs.
+    """
+    health = validate(entries, root)
+    stale_keys = {(f.path, f.line) for f in health}
+    by_key: dict[tuple[str, str, str], Entry] = {}
+    for e in entries:
+        by_key[e.key()] = e
+
+    new, grandfathered, used = [], [], set()
+    for f in findings:
+        full = os.path.join(root, f.path)
+        text = ""
+        if os.path.exists(full) and f.line > 0:
+            with open(full, encoding="utf-8") as fh:
+                lines = fh.read().splitlines()
+            if f.line <= len(lines):
+                text = lines[f.line - 1].strip()
+        key = (f.rule, f.path, text)
+        if key in by_key:
+            grandfathered.append(f)
+            used.add(key)
+        else:
+            new.append(f)
+    for e in entries:
+        if e.key() in used or (e.path, e.line) in stale_keys:
+            continue
+        health.append(report.Finding(
+            report.WARN, f"baseline entry no longer matched by any "
+            f"finding (rule {e.rule}) — the violation was fixed; shrink "
+            "the baseline", path=e.path, line=e.line,
+            rule=config.BASELINE_SHRINK))
+    return new, grandfathered, health

@@ -1,0 +1,110 @@
+"""asymplint CLI.
+
+    python -m tools.asymplint                      # src tests benchmarks
+    python -m tools.asymplint src/repro/serve      # narrower sweep
+    python -m tools.asymplint --list-rules         # what is enforced
+    python -m tools.asymplint --validate-baseline  # staleness only (fast,
+                                                   #  runs pre-install in CI)
+    python -m tools.asymplint --write-baseline     # grandfather the
+                                                   #  current findings
+
+Exit codes follow tools/report.py: 0 clean, 1 findings (new findings,
+stale suppressions, or stale baseline entries), 2 usage error.  Shrink
+opportunities (a baselined violation that got fixed) are warnings.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+from tools import report
+from tools.asymplint import baseline as baseline_mod
+from tools.asymplint import config
+from tools.asymplint.engine import lint_paths
+from tools.asymplint.rules import RULES
+
+TOOL = "asymplint"
+
+
+def repo_root() -> str:
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(os.path.dirname(here))
+
+
+def list_rules() -> int:
+    for info in (r.info for r in RULES):
+        scope = ", ".join(info.scopes) if info.scopes else "everywhere"
+        print(f"{info.code}  {info.id:<18} [{info.severity}] ({scope})")
+        print(f"        {info.summary}")
+        print(f"        why: {info.motivation}")
+    return report.EXIT_OK
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.asymplint",
+        description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*", default=[],
+                    help="files/dirs relative to the repo root "
+                         f"(default: {' '.join(config.DEFAULT_PATHS)})")
+    ap.add_argument("--root", default=repo_root(),
+                    help="repo root (default: auto-detected)")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline file (default: "
+                         f"{config.DEFAULT_BASELINE})")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="grandfather the current findings and exit")
+    ap.add_argument("--validate-baseline", action="store_true",
+                    help="check baseline staleness only (no lint run)")
+    ap.add_argument("--list-rules", action="store_true")
+    opts = ap.parse_args(argv)
+
+    if opts.list_rules:
+        return list_rules()
+
+    root = os.path.abspath(opts.root)
+    baseline_path = opts.baseline or os.path.join(
+        root, *config.DEFAULT_BASELINE.split("/"))
+    try:
+        entries = baseline_mod.load(baseline_path)
+    except (ValueError, KeyError, TypeError) as exc:
+        print(f"[{TOOL}] [ERROR] unreadable baseline: {exc}")
+        return report.EXIT_USAGE
+
+    if opts.validate_baseline:
+        health = baseline_mod.validate(entries, root)
+        report.emit(TOOL, health)
+        print(f"[{TOOL}] baseline: {len(entries)} entries, "
+              f"{len(health)} stale")
+        return report.exit_code(health)
+
+    paths = opts.paths or list(config.DEFAULT_PATHS)
+    missing = [p for p in paths
+               if not os.path.exists(os.path.join(root, p))]
+    if missing:
+        print(f"[{TOOL}] [ERROR] no such path(s) under {root}: "
+              f"{', '.join(missing)}")
+        return report.EXIT_USAGE
+
+    result = lint_paths(paths, root)
+
+    if opts.write_baseline:
+        entries = baseline_mod.from_findings(
+            result.findings, root,
+            justification="grandfathered by --write-baseline; replace "
+                          "with a real reason or fix the finding")
+        baseline_mod.save(entries, baseline_path)
+        print(f"[{TOOL}] wrote {len(entries)} entries to "
+              f"{baseline_path}")
+        return report.EXIT_OK
+
+    new, grandfathered, health = baseline_mod.apply(
+        result.findings, entries, root)
+    visible = new + health
+    report.emit(TOOL, visible)
+    failing = [f for f in visible if f.severity in report.FAILING]
+    print(f"[{TOOL}] {result.files} files, {len(RULES)} rules: "
+          f"{len(failing)} failing finding(s), "
+          f"{len(grandfathered)} baselined, "
+          f"{len(result.suppressed)} suppressed inline")
+    return report.exit_code(visible)

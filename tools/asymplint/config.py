@@ -1,0 +1,90 @@
+"""Rule metadata: ids, codes, severities, path scopes, motivations.
+
+The scope globs keep rules on the layers whose contract they encode —
+``tick-keying`` and ``cursor-latch`` guard engine internals, so a test
+that legitimately drives ``fire_mask`` with a loop counter (probing the
+interleaving as a pure function) is out of scope rather than suppressed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from fnmatch import fnmatch
+
+from tools import report
+
+
+@dataclass(frozen=True)
+class RuleInfo:
+    id: str            # stable kebab-case name used in disable= comments
+    code: str          # ASLxxx, for grep-ability
+    severity: str      # report.ERROR fails CI; report.WARN is advisory
+    summary: str       # one line: the invariant
+    motivation: str    # the PR/bug class that paid for the rule
+    scopes: tuple[str, ...] = ()   # fnmatch globs on posix relpaths;
+    #                                empty = every swept file
+
+    def in_scope(self, relpath: str) -> bool:
+        return not self.scopes or any(fnmatch(relpath, g)
+                                      for g in self.scopes)
+
+
+RULE_INFOS: tuple[RuleInfo, ...] = (
+    RuleInfo("jit-purity", "ASL001", report.ERROR,
+             "no np./random/time/print inside functions traced by "
+             "jax.jit / shard_map / pl.pallas_call (call-graph walk over "
+             "the module)",
+             "host-side ops silently constant-fold at trace time; the "
+             "PR-6 class of 'worked until the second call'"),
+    RuleInfo("aux-parity", "ASL002", report.ERROR,
+             "every make_*_tick builder threads the full EngineState "
+             "field set (values/active/cursor/tick/aux)",
+             "PR-4: the dist tick dropped `aux`, so pagerank residuals "
+             "froze under sharding"),
+    RuleInfo("wire-gate", "ASL003", report.ERROR,
+             "lossy WireCodec construction must be dominated by the "
+             "effective_compression gate (or pass idempotent= so the "
+             "codec can refuse lossy x SUM itself)",
+             "PR-5: int8 quantization of a SUM payload double-counts "
+             "mass; only the gate knows the aggregator is lossy-unsafe"),
+    RuleInfo("pin-balance", "ASL004", report.ERROR,
+             "every store.pin(...) outside the store itself is released "
+             "on all paths (unpin in a finally: / reader() context "
+             "manager)",
+             "PR-9: keep-N GC deleted an epoch a lazily-loading view "
+             "still held — a leaked pin is the same race inverted"),
+    RuleInfo("tick-keying", "ASL005", report.ERROR,
+             "fire_mask() is keyed by the device clock carried in state "
+             "(…core.tick), never a host loop counter",
+             "PR-6: checkpoint restore rewinds the device tick; a "
+             "host-step key shifts the firing pattern and loses mass",
+             scopes=("src/*",)),
+    RuleInfo("cursor-latch", "ASL006", report.ERROR,
+             "push-mode latch predicates must consult the edge cursor "
+             "(mid-push == nonzero latch OR nonzero cursor)",
+             "PR-8: a zero-mass push advanced the cursor with an empty "
+             "latch, so the next push shipped only the adjacency tail",
+             scopes=("src/*",)),
+    RuleInfo("registry-contract", "ASL007", report.ERROR,
+             "a VertexProgram built on a non-idempotent aggregator "
+             "(SUM) must declare self_stabilizing=False",
+             "the fault manager replays self-stabilizing programs in "
+             "place; replaying a SUM double-counts — recovery must take "
+             "the checkpoint-restore path"),
+    RuleInfo("bench-rows", "ASL008", report.ERROR,
+             "bench modules emit rows only from inside a collect() "
+             "scope — no module-level ROWS store, no import-time emit",
+             "PR-7: a global ROWS list aggregated rows across areas, so "
+             "reruns in one process double-reported",
+             scopes=("benchmarks/*",)),
+)
+
+RULE_BY_ID = {info.id: info for info in RULE_INFOS}
+
+# Meta-findings produced by the engine itself (not rules you can run):
+STALE_SUPPRESSION = "stale-suppression"   # disable= matching no finding
+STALE_BASELINE = "stale-baseline"         # entry whose file:line is gone
+BASELINE_SHRINK = "baseline-shrink"       # entry whose finding was fixed
+
+DEFAULT_PATHS = ("src", "tests", "benchmarks")
+DEFAULT_BASELINE = "tools/asymplint/baseline.json"
+EXCLUDE_PARTS = frozenset({"__pycache__", ".git", "baselines"})

@@ -1,0 +1,172 @@
+"""asymplint core: parse, run rules, apply suppressions.
+
+The engine knows nothing about the individual invariants — it parses a
+file once into a ``FileContext``, hands that to every in-scope rule, and
+reconciles the raw findings against inline suppressions.  Suppression
+comments are read with ``tokenize`` (not a regex over raw lines) so a
+``# asymplint: disable=...`` inside a string literal — e.g. the fixture
+snippets in ``tests/test_asymplint.py`` — is never treated as live.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import os
+import re
+import tokenize
+from dataclasses import dataclass, field
+
+from tools import report
+from tools.asymplint import config
+
+Finding = report.Finding
+
+_DISABLE = re.compile(r"#\s*asymplint:\s*disable=([A-Za-z0-9_, -]+)")
+
+
+@dataclass
+class Suppressions:
+    """disable= comments by line, plus which of them actually fired."""
+    by_line: dict[int, set[str]] = field(default_factory=dict)
+    used: set[int] = field(default_factory=set)
+
+    @classmethod
+    def scan(cls, source: str) -> "Suppressions":
+        sup = cls()
+        try:
+            tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+            for tok in tokens:
+                if tok.type != tokenize.COMMENT:
+                    continue
+                m = _DISABLE.search(tok.string)
+                if m:
+                    rules = {r.strip() for r in m.group(1).split(",")
+                             if r.strip()}
+                    sup.by_line.setdefault(tok.start[0], set()).update(rules)
+        except tokenize.TokenError:
+            pass  # the ast parse will report the real problem
+        return sup
+
+    def covers(self, rule: str, line: int) -> bool:
+        """A finding is silenced by its own line or the line above."""
+        for cand in (line, line - 1):
+            rules = self.by_line.get(cand)
+            if rules and (rule in rules or "all" in rules):
+                self.used.add(cand)
+                return True
+        return False
+
+    def stale(self) -> list[tuple[int, set[str]]]:
+        return sorted((ln, rules) for ln, rules in self.by_line.items()
+                      if ln not in self.used)
+
+
+@dataclass
+class FileContext:
+    """One parsed file, as every rule sees it."""
+    path: str               # posix relpath from the repo root
+    source: str
+    tree: ast.Module
+    lines: list[str]
+
+    _parents: dict[int, ast.AST] | None = None
+
+    @classmethod
+    def parse(cls, source: str, path: str) -> "FileContext":
+        tree = ast.parse(source, filename=path)
+        return cls(path=path, source=source, tree=tree,
+                   lines=source.splitlines())
+
+    def parent_map(self) -> dict[int, ast.AST]:
+        """id(child) -> parent, built lazily once per file."""
+        if self._parents is None:
+            self._parents = {}
+            for node in ast.walk(self.tree):
+                for child in ast.iter_child_nodes(node):
+                    self._parents[id(child)] = node
+        return self._parents
+
+    def enclosing(self, node: ast.AST, *types) -> ast.AST | None:
+        """Nearest ancestor of one of ``types`` (not ``node`` itself)."""
+        parents = self.parent_map()
+        cur = parents.get(id(node))
+        while cur is not None:
+            if isinstance(cur, types):
+                return cur
+            cur = parents.get(id(cur))
+        return None
+
+    def line_text(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+
+@dataclass
+class LintResult:
+    findings: list[Finding] = field(default_factory=list)
+    suppressed: list[Finding] = field(default_factory=list)
+    files: int = 0
+
+    def extend(self, other: "LintResult") -> None:
+        self.findings.extend(other.findings)
+        self.suppressed.extend(other.suppressed)
+        self.files += other.files
+
+
+def lint_source(source: str, path: str, rules=None) -> LintResult:
+    """Lint one in-memory file. ``path`` decides rule scoping."""
+    from tools.asymplint.rules import RULES
+    rules = RULES if rules is None else rules
+    res = LintResult(files=1)
+    try:
+        ctx = FileContext.parse(source, path)
+    except SyntaxError as exc:
+        res.findings.append(Finding(
+            report.ERROR, f"does not parse: {exc.msg}", path=path,
+            line=exc.lineno or 0, rule="syntax"))
+        return res
+    sup = Suppressions.scan(source)
+    for rule in rules:
+        if not rule.info.in_scope(path):
+            continue
+        for raw in rule.check(ctx):
+            f = Finding(rule.info.severity, raw.message, path=path,
+                        line=raw.line, rule=rule.info.id)
+            if sup.covers(rule.info.id, raw.line):
+                res.suppressed.append(f)
+            else:
+                res.findings.append(f)
+    for line, rules_named in sup.stale():
+        res.findings.append(Finding(
+            report.ERROR,
+            f"suppression ({', '.join(sorted(rules_named))}) matches no "
+            "finding — remove it", path=path, line=line,
+            rule=config.STALE_SUPPRESSION))
+    return res
+
+
+def iter_py_files(paths, root: str):
+    """Yield (abs_path, posix_relpath) under each requested path."""
+    for req in paths:
+        top = os.path.join(root, req)
+        if os.path.isfile(top):
+            yield top, os.path.relpath(top, root).replace(os.sep, "/")
+            continue
+        for dirpath, dirnames, filenames in os.walk(top):
+            dirnames[:] = sorted(d for d in dirnames
+                                 if d not in config.EXCLUDE_PARTS)
+            for name in sorted(filenames):
+                if name.endswith(".py"):
+                    full = os.path.join(dirpath, name)
+                    yield full, os.path.relpath(full, root).replace(
+                        os.sep, "/")
+
+
+def lint_paths(paths, root: str, rules=None) -> LintResult:
+    res = LintResult()
+    for full, rel in iter_py_files(paths, root):
+        with open(full, encoding="utf-8") as fh:
+            source = fh.read()
+        res.extend(lint_source(source, rel, rules=rules))
+    return res

@@ -1,0 +1,333 @@
+"""The eight asymplint rules, one per bug class this repo already paid
+for.  Each rule is a pure function ``FileContext -> iter[Raw]`` bound to
+its ``RuleInfo`` (tools/asymplint/config.py) through the registry at the
+bottom; ``tools.asymplint.engine`` handles scoping and suppressions.
+
+Rules over-approximate on the safe side: they flag the *shape* of the
+motivating bug and accept explicit evidence of the fix (a gate call, a
+``finally:`` release, a ``.tick`` data dependency).  Anything cleverer
+belongs in the property tests, not here.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Callable, Iterable, Iterator
+
+from tools.asymplint import config
+from tools.asymplint.callgraph import ModuleGraph, _callable_name
+from tools.asymplint.engine import FileContext
+
+_FUNC = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+@dataclass(frozen=True)
+class Raw:
+    """A rule hit before severity/path are attached."""
+    line: int
+    message: str
+
+
+@dataclass(frozen=True)
+class Rule:
+    info: config.RuleInfo
+    check: Callable[[FileContext], Iterable[Raw]]
+
+
+def _attr_names(node: ast.AST) -> set[str]:
+    return {n.attr for n in ast.walk(node) if isinstance(n, ast.Attribute)}
+
+
+def _name_ids(node: ast.AST) -> set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+# ----------------------------------------------------------------------
+# ASL001 jit-purity — host-side ops inside traced functions
+# ----------------------------------------------------------------------
+def check_jit_purity(ctx: FileContext) -> Iterator[Raw]:
+    graph = ModuleGraph.build(ctx.tree)
+    reported: set[tuple[int, str]] = set()
+    for entry, _ in graph.jit_entries(ctx.tree):
+        for fn in graph.reachable(entry):
+            for line, what in graph.impure_uses(fn):
+                key = (line, what)
+                if key in reported:
+                    continue
+                reported.add(key)
+                label = getattr(fn, "name", "<lambda>")
+                yield Raw(line, f"{what} inside traced function "
+                                f"`{label}` — use jnp/lax or hoist to "
+                                "the host side")
+
+
+# ----------------------------------------------------------------------
+# ASL002 aux-parity — tick builders must thread every EngineState field
+# ----------------------------------------------------------------------
+def _engine_state_fields(tree: ast.Module) -> list[str]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == "EngineState":
+            if any(_callable_name(b) == "NamedTuple" for b in node.bases):
+                return [s.target.id for s in node.body
+                        if isinstance(s, ast.AnnAssign)
+                        and isinstance(s.target, ast.Name)]
+    return []
+
+
+def check_aux_parity(ctx: FileContext) -> Iterator[Raw]:
+    fields = _engine_state_fields(ctx.tree)
+    if not fields:
+        return
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, _FUNC) and node.name.startswith("make_")
+                and node.name.endswith("_tick")):
+            continue
+        seen = _attr_names(node) | _name_ids(node)
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                seen |= {k.arg for k in sub.keywords if k.arg}
+        missing = [f for f in fields if f not in seen]
+        if missing:
+            yield Raw(node.lineno,
+                      f"`{node.name}` never touches EngineState field(s) "
+                      f"{missing} — a tick that drops state silently "
+                      "freezes it (PR-4 aux drift)")
+
+
+# ----------------------------------------------------------------------
+# ASL003 wire-gate — lossy codecs only through effective_compression
+# ----------------------------------------------------------------------
+def _defines_class(tree: ast.Module, name: str) -> bool:
+    return any(isinstance(n, ast.ClassDef) and n.name == name
+               for n in ast.walk(tree))
+
+
+def _gated(expr: ast.AST, ctx: FileContext, call: ast.Call) -> bool:
+    """Is this requested-mode expression dominated by the gate?"""
+    if isinstance(expr, ast.Constant) and expr.value in (None, "none"):
+        return True
+    if isinstance(expr, ast.Call) and \
+            _callable_name(expr.func) == "effective_compression":
+        return True
+    fn = ctx.enclosing(call, *_FUNC)
+    if isinstance(expr, ast.Name) and fn is not None:
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Assign) and any(
+                    isinstance(t, ast.Name) and t.id == expr.id
+                    for t in sub.targets):
+                if any(isinstance(v, ast.Call) and
+                       _callable_name(v.func) == "effective_compression"
+                       for v in ast.walk(sub.value)):
+                    return True
+    if isinstance(expr, ast.Attribute) and isinstance(expr.value, ast.Name) \
+            and fn is not None:
+        # attribute of a parameter annotated EngineParams: wire modes on
+        # derived params are pre-gated by contract (derive_params)
+        for arg in getattr(fn, "args", ast.arguments(
+                posonlyargs=[], args=[], kwonlyargs=[], kw_defaults=[],
+                defaults=[])).args:
+            if arg.arg == expr.value.id and arg.annotation is not None \
+                    and _callable_name(arg.annotation) == "EngineParams":
+                return True
+    return False
+
+
+def check_wire_gate(ctx: FileContext) -> Iterator[Raw]:
+    codec_home = _defines_class(ctx.tree, "WireCodec")
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _callable_name(node.func)
+        if name == "WireCodec" and not codec_home:
+            yield Raw(node.lineno,
+                      "direct WireCodec(...) construction bypasses the "
+                      "effective_compression gate — build through "
+                      "make_wire_codec")
+        elif name == "make_wire_codec":
+            kw = {k.arg: k.value for k in node.keywords if k.arg}
+            requested = kw.get("requested")
+            if requested is None and len(node.args) > 3:
+                requested = node.args[3]
+            if requested is None or _gated(requested, ctx, node):
+                continue
+            if "idempotent" not in kw:
+                yield Raw(node.lineno,
+                          "lossy-capable make_wire_codec without "
+                          "idempotent= — the gate defaults to "
+                          "idempotent=True and would admit a lossy mode "
+                          "for a SUM payload; pass the aggregator's flag "
+                          "explicitly")
+
+
+# ----------------------------------------------------------------------
+# ASL004 pin-balance — pins outside the store released on all paths
+# ----------------------------------------------------------------------
+def _class_defines(cls: ast.ClassDef, *names: str) -> bool:
+    have = {n.name for n in cls.body if isinstance(n, _FUNC)}
+    return all(n in have for n in names)
+
+
+def check_pin_balance(ctx: FileContext) -> Iterator[Raw]:
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call) and
+                isinstance(node.func, ast.Attribute) and
+                node.func.attr == "pin"):
+            continue
+        cls = ctx.enclosing(node, ast.ClassDef)
+        if isinstance(cls, ast.ClassDef) and \
+                _class_defines(cls, "pin", "unpin"):
+            continue   # the store's own machinery owns its refcounts
+        fn = ctx.enclosing(node, *_FUNC)
+        balanced = False
+        if fn is not None:
+            for sub in ast.walk(fn):
+                if isinstance(sub, ast.Try):
+                    for stmt in sub.finalbody:
+                        for c in ast.walk(stmt):
+                            if isinstance(c, ast.Call) and \
+                                    isinstance(c.func, ast.Attribute) and \
+                                    c.func.attr == "unpin":
+                                balanced = True
+        if not balanced:
+            yield Raw(node.lineno,
+                      "pin() without an unpin() in a finally: — an "
+                      "exception on this path leaks the pin and blocks "
+                      "epoch GC forever (use reader()/view() or "
+                      "try/finally)")
+
+
+# ----------------------------------------------------------------------
+# ASL005 tick-keying — fire_mask keyed by the device clock
+# ----------------------------------------------------------------------
+_HOST_COUNTER_NAMES = frozenset({"t", "i", "step", "host_step", "n"})
+
+
+def _has_tick_dep(expr: ast.AST) -> bool:
+    return "tick" in _attr_names(expr) or \
+        bool({"dev_tick", "device_tick"} & _name_ids(expr))
+
+
+def check_tick_keying(ctx: FileContext) -> Iterator[Raw]:
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call) and
+                isinstance(node.func, ast.Attribute) and
+                node.func.attr == "fire_mask" and node.args):
+            continue
+        key = node.args[0]
+        if _has_tick_dep(key):
+            continue
+        fn = ctx.enclosing(node, *_FUNC)
+        bad = None
+        if isinstance(key, ast.Attribute) and key.attr.lstrip("_") in \
+                _HOST_COUNTER_NAMES:
+            bad = f"self.{key.attr}"
+        elif isinstance(key, ast.Name) and fn is not None:
+            for sub in ast.walk(fn):
+                if isinstance(sub, ast.For) and \
+                        isinstance(sub.target, ast.Name) and \
+                        sub.target.id == key.id:
+                    bad = f"loop counter `{key.id}`"
+                if isinstance(sub, ast.Assign) and any(
+                        isinstance(t, ast.Name) and t.id == key.id
+                        for t in sub.targets):
+                    bad = None if _has_tick_dep(sub.value) else \
+                        f"`{key.id}` (no .tick data dependency)"
+        if bad:
+            yield Raw(node.lineno,
+                      f"fire_mask keyed by {bad} — checkpoint restore "
+                      "rewinds the device tick, so a host-step key "
+                      "shifts the firing pattern (PR-6); key with "
+                      "state.core.tick")
+
+
+# ----------------------------------------------------------------------
+# ASL006 cursor-latch — latch predicates must consult the cursor
+# ----------------------------------------------------------------------
+def check_cursor_latch(ctx: FileContext) -> Iterator[Raw]:
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        targets = [t.id for t in node.targets
+                   if isinstance(t, ast.Name) and t.id.startswith("latch")]
+        if not targets:
+            continue
+        refs = {r.lower() for r in _name_ids(node.value)} | \
+            {r.lower() for r in _attr_names(node.value)}
+        if not any("cur" in r for r in refs):
+            yield Raw(node.lineno,
+                      f"`{targets[0]}` computed without the edge cursor "
+                      "— a zero-mass push with an empty latch but a "
+                      "nonzero cursor ships only the adjacency tail "
+                      "(PR-8); include `(cur == 0)` in the predicate")
+
+
+# ----------------------------------------------------------------------
+# ASL007 registry-contract — SUM programs are not self-stabilizing
+# ----------------------------------------------------------------------
+_NON_IDEMPOTENT = frozenset({"SUM"})
+
+
+def check_registry_contract(ctx: FileContext) -> Iterator[Raw]:
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call) and
+                _callable_name(node.func) == "VertexProgram"):
+            continue
+        kw = {k.arg: k.value for k in node.keywords if k.arg}
+        agg = kw.get("aggregator")
+        if agg is None and len(node.args) > 2:
+            agg = node.args[2]
+        if agg is None or _callable_name(agg) not in _NON_IDEMPOTENT:
+            continue
+        ss = kw.get("self_stabilizing")
+        if not (isinstance(ss, ast.Constant) and ss.value is False):
+            yield Raw(node.lineno,
+                      "VertexProgram over SUM without "
+                      "self_stabilizing=False — replaying a "
+                      "non-idempotent reduce double-counts; recovery "
+                      "must take the checkpoint-restore path")
+
+
+# ----------------------------------------------------------------------
+# ASL008 bench-rows — rows only from inside a collect() scope
+# ----------------------------------------------------------------------
+_EMITTERS = frozenset({"emit", "record"})
+
+
+def check_bench_rows(ctx: FileContext) -> Iterator[Raw]:
+    for stmt in ctx.tree.body:                      # module level only
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                if isinstance(t, ast.Name) and \
+                        t.id.lstrip("_").upper() == "ROWS" and \
+                        isinstance(stmt.value, (ast.List, ast.Dict)):
+                    yield Raw(stmt.lineno,
+                              f"module-level `{t.id}` store — rows "
+                              "aggregated across areas double-report on "
+                              "rerun (PR-7); emit through a collect() "
+                              "scope")
+        for sub in ast.walk(stmt):
+            if isinstance(sub, _FUNC):
+                break   # bodies run under bench_cli's collect() scope
+            if isinstance(sub, ast.Call) and \
+                    _callable_name(sub.func) in _EMITTERS:
+                yield Raw(sub.lineno,
+                          f"`{_callable_name(sub.func)}()` at import "
+                          "time — outside any collect() scope this row "
+                          "is dropped (or worse, leaks into the next "
+                          "area's recorder)")
+
+
+RULES: tuple[Rule, ...] = (
+    Rule(config.RULE_BY_ID["jit-purity"], check_jit_purity),
+    Rule(config.RULE_BY_ID["aux-parity"], check_aux_parity),
+    Rule(config.RULE_BY_ID["wire-gate"], check_wire_gate),
+    Rule(config.RULE_BY_ID["pin-balance"], check_pin_balance),
+    Rule(config.RULE_BY_ID["tick-keying"], check_tick_keying),
+    Rule(config.RULE_BY_ID["cursor-latch"], check_cursor_latch),
+    Rule(config.RULE_BY_ID["registry-contract"], check_registry_contract),
+    Rule(config.RULE_BY_ID["bench-rows"], check_bench_rows),
+)
+
+
+def rule_infos() -> tuple[config.RuleInfo, ...]:
+    return tuple(r.info for r in RULES)

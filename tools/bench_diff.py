@@ -39,8 +39,12 @@ _ROOT = os.path.dirname(_HERE)
 sys.path.insert(0, _ROOT)
 
 from benchmarks import results  # noqa: E402
+from tools import report  # noqa: E402
 
-DRIFT, WARN, NOTE, IMPROVED = "DRIFT", "WARN", "note", "improved"
+# bench_diff's failing class is DRIFT; the ladder and the exit-code
+# convention are shared across the tools package (tools/report.py)
+DRIFT, WARN, NOTE, IMPROVED = (report.DRIFT, report.WARN, report.NOTE,
+                               report.IMPROVED)
 
 
 def _is_number(v) -> bool:
@@ -142,8 +146,7 @@ def diff_area(base_doc: dict, fresh_doc: dict, opts) -> list[tuple[str, str]]:
     for key in fresh_rows.keys() - base_rows.keys():
         findings.append((WARN, f"{area}:{key[0]}/{key[1]}: new row "
                                "(not in baseline — refresh to track it)"))
-    order = {DRIFT: 0, WARN: 1, IMPROVED: 2, NOTE: 3}
-    findings.sort(key=lambda f: order[f[0]])
+    findings.sort(key=lambda f: report.severity_rank(f[0]))
     return findings
 
 
@@ -185,7 +188,7 @@ def main(argv=None) -> int:
         print(f"bench_diff: no baselines under {opts.baseline} and no "
               "--areas given; run the benchmarks and --refresh-baseline "
               "to start the trajectory")
-        return 1
+        return report.EXIT_USAGE
 
     if opts.refresh_baseline:
         os.makedirs(opts.baseline, exist_ok=True)
@@ -195,13 +198,13 @@ def main(argv=None) -> int:
             if doc["status"] != "ok":
                 print(f"refusing to adopt {src}: status="
                       f"{doc['status']!r}")
-                return 1
+                return report.EXIT_FINDINGS
             shutil.copyfile(src,
                             os.path.join(opts.baseline,
                                          f"BENCH_{area}.json"))
             print(f"baseline refreshed: {area} "
                   f"({doc['summary']['rows']} rows)")
-        return 0
+        return report.EXIT_OK
 
     failed = False
     for area in areas:
@@ -231,9 +234,9 @@ def main(argv=None) -> int:
         print("\nbench_diff: FAILED — unexplained drift against the "
               "committed trajectory.  If the change is intended, rerun "
               "with --refresh-baseline and commit the new BENCH_*.json.")
-        return 1
+        return report.EXIT_FINDINGS
     print("\nbench_diff: OK — trajectory holds.")
-    return 0
+    return report.EXIT_OK
 
 
 if __name__ == "__main__":

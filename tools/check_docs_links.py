@@ -18,6 +18,9 @@ import sys
 from pathlib import Path
 
 REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))
+
+from tools import report  # noqa: E402
 
 # [text](target) — skip external schemes and in-page anchors
 _MD_LINK = re.compile(r"\[[^\]]+\]\(([^)#\s]+)(?:#[^)]*)?\)")
@@ -58,12 +61,12 @@ def check(path: Path) -> list[str]:
 
 def main() -> int:
     files = doc_files()
-    errors = [e for f in files for e in check(f)]
-    for e in errors:
-        print(f"[check_docs_links] {e}", file=sys.stderr)
+    findings = [report.Finding(report.ERROR, e)
+                for f in files for e in check(f)]
+    report.emit("check_docs_links", findings, stream=sys.stderr)
     print(f"[check_docs_links] {len(files)} files checked, "
-          f"{len(errors)} dangling references")
-    return 1 if errors else 0
+          f"{len(findings)} dangling references")
+    return report.exit_code(findings)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,74 @@
+"""Shared finding/report conventions for the tools in this package.
+
+``asymplint``, ``bench_diff`` and ``check_docs_links`` all reduce to the
+same shape: walk some inputs, collect ``Finding``s, print them most
+severe first, and exit 0 only when nothing in a *failing* severity
+survived.  This module is that shape, stdlib-only so every tool can run
+before the heavyweight deps are installed (the no-bytecode CI step runs
+``asymplint --validate-baseline`` on the bare runner python).
+
+Severity ladder (most severe first):
+
+  * ``ERROR`` / ``DRIFT`` — fail the run (``DRIFT`` is bench_diff's
+    domain name for the same class; both map to exit 1)
+  * ``WARN``              — printed, never failing
+  * ``improved`` / ``note`` — informational
+
+Exit codes: ``EXIT_OK`` (0) clean, ``EXIT_FINDINGS`` (1) at least one
+failing finding, ``EXIT_USAGE`` (2) bad invocation.
+"""
+from __future__ import annotations
+
+import sys
+from dataclasses import dataclass
+
+ERROR = "ERROR"
+DRIFT = "DRIFT"   # bench_diff's name for its failing class
+WARN = "WARN"
+IMPROVED = "improved"
+NOTE = "note"
+
+FAILING = frozenset({ERROR, DRIFT})
+_RANK = {ERROR: 0, DRIFT: 0, WARN: 1, IMPROVED: 2, NOTE: 3}
+
+EXIT_OK = 0
+EXIT_FINDINGS = 1
+EXIT_USAGE = 2
+
+
+def severity_rank(severity: str) -> int:
+    """Sort key: unknown severities sort with warnings, not silently."""
+    return _RANK.get(severity, 1)
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One reportable fact: where, how bad, what."""
+    severity: str
+    message: str
+    path: str = ""
+    line: int = 0
+    rule: str = ""
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}: " if self.path else ""
+        tag = f" {self.rule}:" if self.rule else ""
+        return f"{loc}[{self.severity}]{tag} {self.message}"
+
+
+def sort_findings(findings: list[Finding]) -> list[Finding]:
+    """Severity-major, then file/line — stable for identical keys."""
+    return sorted(findings,
+                  key=lambda f: (severity_rank(f.severity), f.path, f.line))
+
+
+def emit(tool: str, findings: list[Finding], stream=None) -> None:
+    """Print each finding on one ``[tool]``-prefixed line."""
+    stream = stream if stream is not None else sys.stdout
+    for f in sort_findings(findings):
+        print(f"[{tool}] {f.format()}", file=stream)
+
+
+def exit_code(findings: list[Finding]) -> int:
+    return EXIT_FINDINGS if any(f.severity in FAILING for f in findings) \
+        else EXIT_OK
